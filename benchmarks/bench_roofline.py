@@ -1,0 +1,164 @@
+"""Roofline analysis (brief §Roofline): three terms per (arch x shape x mesh).
+
+Reads the dry-run JSONL (results/dryrun_full.jsonl by default, or regenerates
+single cells on demand) and derives, per cell:
+
+    compute term    = HLO_FLOPs_total / (chips x 197e12 FLOP/s)
+    memory term     = HLO_bytes_total / (chips x 819e9 B/s)
+    collective term = collective_bytes_total / (chips x 50e9 B/s per link)
+
+cost_analysis() on the SPMD executable reports *per-device* numbers, so
+totals are per-device x chips; the three terms are therefore equivalently
+per-device quantities over per-chip peaks, which is how they're computed
+below.  The dominant term is the bottleneck; MODEL_FLOPS/HLO_FLOPs measures
+how much compiled compute is 'useful' (remat/dispatch overhead shows here —
+remat targets ~1/ (1+recompute) ~ 0.75 for a 1-recompute policy).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link; 2D torus: ~4 usable links/chip,
+                             # but collectives serialize per axis — we charge
+                             # the conservative single-link rate.
+
+DEFAULT_RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                               "dryrun_full.jsonl")
+
+
+def _score_traffic_bytes_per_dev(rec: Dict) -> float:
+    """Modeled HBM traffic of materialized attention score tiles in the XLA
+    chunked-attention path — the traffic the Pallas flash kernel keeps in
+    VMEM on real hardware.  ~passes x B x H x S x T x 4 bytes / devices
+    (passes: fwd writes+reads s and p ~4; bwd recompute ~4 more)."""
+    from repro.configs.base import SHAPES, get_arch
+
+    cfg = get_arch(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    if shape.kind == "decode" or cfg.family == "ssm":
+        return 0.0
+    B, S = shape.global_batch, shape.seq_len
+    T = min(cfg.window, S) if cfg.window else S
+    passes = 8.0 if shape.kind == "train" else 4.0
+    total = passes * B * cfg.n_heads * S * T * 4.0
+    if cfg.family == "audio":   # decoder-only self-attn portion
+        total *= cfg.n_layers / max(cfg.n_layers + cfg.enc_layers, 1)
+    return total / rec["devices"]
+
+
+def roofline_terms(rec: Dict) -> Dict:
+    flops_dev = rec["flops_per_device"]
+    bytes_dev = rec["bytes_per_device"]
+    coll_dev = rec["collective_bytes_per_device"]["total"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    model_flops_dev = rec["model_flops_total"] / rec["devices"]
+    useful = model_flops_dev / max(flops_dev, 1e-9)
+    # roofline fraction: useful model FLOPs per second achievable if the
+    # dominant term were the only cost, vs chip peak
+    frac = (model_flops_dev / max(bound, 1e-12)) / PEAK_FLOPS
+    # memory term under a Pallas-flash deployment (score tiles in VMEM)
+    kern_mem = max(bytes_dev - _score_traffic_bytes_per_dev(rec), 0) / HBM_BW
+    kern_bound = max(t_compute, kern_mem, t_coll)
+    kern_frac = (model_flops_dev / max(kern_bound, 1e-12)) / PEAK_FLOPS
+    mem = rec["memory"]
+    fit_bytes = (mem["argument_bytes"] + mem["temp_bytes"]
+                 + mem["output_bytes"] - max(mem["alias_bytes"], 0))
+    return {**terms, "dominant": dominant, "useful_flops_frac": useful,
+            "roofline_frac": frac, "kern_memory": kern_mem,
+            "kern_roofline_frac": kern_frac,
+            "hbm_gib": fit_bytes / 2 ** 30,
+            "fits_16g": fit_bytes <= 16 * 2 ** 30}
+
+
+def load_results(path: str = DEFAULT_RESULTS) -> List[Dict]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            out.append(json.loads(line))
+    return out
+
+
+def format_table(records: List[Dict], mesh: Optional[str] = "16x16") -> str:
+    rows = []
+    header = (f"{'arch':18s} {'shape':12s} {'mesh':8s} {'comp(ms)':>9s} "
+              f"{'mem(ms)':>9s} {'kern-mem':>9s} {'coll(ms)':>9s} "
+              f"{'bound':>10s} {'useful':>7s} {'roof%':>6s} {'kern%':>6s} "
+              f"{'HBM GiB':>8s} fit")
+    rows.append(header)
+    rows.append("-" * len(header))
+    for rec in records:
+        if mesh and rec["mesh"] != mesh:
+            continue
+        t = roofline_terms(rec)
+        rows.append(
+            f"{rec['arch']:18s} {rec['shape']:12s} {rec['mesh']:8s} "
+            f"{t['compute']*1e3:9.2f} {t['memory']*1e3:9.2f} "
+            f"{t['kern_memory']*1e3:9.2f} "
+            f"{t['collective']*1e3:9.2f} {t['dominant']:>10s} "
+            f"{t['useful_flops_frac']:7.2f} {t['roofline_frac']*100:5.1f}% "
+            f"{t['kern_roofline_frac']*100:5.1f}% "
+            f"{t['hbm_gib']:8.2f} {'Y' if t['fits_16g'] else 'OVER'}")
+    return "\n".join(rows)
+
+
+def run(out_csv: Optional[str] = None) -> str:
+    records = load_results()
+    lines = ["# Roofline — single-pod 16x16 (roofline table)",
+             format_table(records, "16x16"),
+             "", "# Multi-pod 2x16x16 (runnability pass)",
+             format_table(records, "2x16x16")]
+    text = "\n".join(lines)
+    if out_csv:
+        with open(out_csv, "w") as f:
+            f.write("arch,shape,mesh,compute_s,memory_s,collective_s,"
+                    "dominant,useful_frac,roofline_frac,hbm_gib,fits\n")
+            for rec in records:
+                t = roofline_terms(rec)
+                f.write(f"{rec['arch']},{rec['shape']},{rec['mesh']},"
+                        f"{t['compute']:.6f},{t['memory']:.6f},"
+                        f"{t['collective']:.6f},{t['dominant']},"
+                        f"{t['useful_flops_frac']:.3f},"
+                        f"{t['roofline_frac']:.4f},{t['hbm_gib']:.2f},"
+                        f"{int(t['fits_16g'])}\n")
+    return text
+
+
+def inject_into_experiments(text: str) -> None:
+    """Replace the <!-- ROOFLINE_TABLE --> marker block in EXPERIMENTS.md."""
+    path = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+    if not os.path.exists(path):
+        return
+    with open(path) as f:
+        doc = f.read()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    if marker not in doc:
+        return
+    block = marker + "\n```\n" + text + "\n```"
+    start = doc.index(marker)
+    end = doc.find("\n\nReading the table:", start)
+    if end == -1:
+        end = start + len(marker)
+    doc = doc[:start] + block + doc[end:]
+    with open(path, "w") as f:
+        f.write(doc)
+
+
+def main() -> None:
+    text = run(out_csv=os.path.join(os.path.dirname(DEFAULT_RESULTS),
+                                    "roofline.csv"))
+    print(text)
+    inject_into_experiments(text)
+
+
+if __name__ == "__main__":
+    main()

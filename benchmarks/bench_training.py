@@ -1,0 +1,125 @@
+"""Paper Table 4: multi-GPU training throughput at varying latencies.
+
+Reproduces the experiment shape: 8 consumers ("GPUs") each with its own
+loader shard, sharing the client NIC and the storage node; each consumer
+takes a batch then "trains" for the no-I/O step time.  The no-I/O upper
+bound (paper: 11199 img/s for 8xA100 ResNet-50) sets the step time; the
+metric is aggregate samples/s vs that bound.
+
+Paper targets (img/s): no-I/O 11199; ours 10608/10587/10485 (94-96%);
+MosaicML SD 6209/5424/3992 (57/49/33%).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Cluster, KVStore, LoaderConfig, VirtualClock
+from repro.core.connection import ConnectionPool
+from repro.core.competitors import RecordShardLoader, build_shards
+from repro.core.netsim import TIERS, RateResource, NIC_BANDWIDTH
+from repro.core.prefetcher import EpochPlan, PrefetchConfig, make_prefetcher
+
+from .common import make_store, mean_std, write_csv
+
+N_GPUS = 8
+NO_IO_IMGS_PER_S = 11199.0          # paper's fixed-tensor upper bound
+BATCH = 512
+STEP_TIME = BATCH / (NO_IO_IMGS_PER_S / N_GPUS)   # per-GPU step seconds
+
+PAPER = {"cassandra-dali": {"low": 10608, "med": 10587, "high": 10485},
+         "mosaicml-sd": {"low": 6209, "med": 5424, "high": 3992}}
+
+
+def run_ours(route: str, seed: int = 1, n_batches: int = 60) -> float:
+    """8 loaders (one per GPU) sharing one cluster + client NIC."""
+    store, uuids = make_store()
+    clock = VirtualClock()
+    cluster = Cluster(clock, store, backend="scylla", seed=seed)
+    shared_ingress = RateResource("client/ingress", NIC_BANDWIDTH)
+    loaders = []
+    for g in range(N_GPUS):
+        cfg = LoaderConfig(batch_size=BATCH, prefetch_buffers=8, io_threads=4,
+                           route=route, seed=seed + g, shard_id=g,
+                           num_shards=N_GPUS)
+        pool = ConnectionPool(clock, cluster, TIERS[route],
+                              io_threads=cfg.io_threads, seed=seed + 31 * g)
+        pool.ingress = shared_ingress          # all GPUs share the NIC
+        for c in pool.connections:
+            c._client_ingress = shared_ingress
+        plan = EpochPlan(uuids, seed=seed, shard_id=g, num_shards=N_GPUS)
+        pf = make_prefetcher(clock, pool, plan,
+                             PrefetchConfig(batch_size=BATCH))
+        pf.start()
+        loaders.append(pf)
+
+    # round-robin consumers with per-GPU step time
+    t_next = [0.0] * N_GPUS
+    done = [0] * N_GPUS
+    t0 = None
+    while min(done) < n_batches:
+        g = int(np.argmin(t_next))
+        if clock.now() < t_next[g]:
+            clock.sleep(t_next[g] - clock.now())
+        loaders[g].next_batch()
+        if t0 is None:
+            t0 = clock.now()
+        done[g] += 1
+        t_next[g] = max(clock.now(), t_next[g]) + STEP_TIME
+    total = sum(done) * BATCH
+    return total / max(clock.now() - t0, 1e-9)
+
+
+def run_sd(route: str, seed: int = 1, n_batches: int = 40) -> float:
+    store, uuids = make_store()
+    clock = VirtualClock()
+    cluster = Cluster(clock, store, backend="scylla", seed=seed)
+    shards = build_shards(store, uuids)
+    per = len(shards) // N_GPUS
+    # per-rank SD keeps only a small shard lookahead (library default);
+    # aggregate supply across 8 ranks is what the paper's Table 4 measures
+    loaders = [RecordShardLoader(clock, cluster, route,
+                                 shards[g * per:(g + 1) * per],
+                                 batch_size=BATCH, predownload=2,
+                                 seed=seed + g).start()
+               for g in range(N_GPUS)]
+    t_next = [0.0] * N_GPUS
+    done = [0] * N_GPUS
+    t0 = None
+    while min(done) < n_batches:
+        g = int(np.argmin(t_next))
+        if clock.now() < t_next[g]:
+            clock.sleep(t_next[g] - clock.now())
+        loaders[g].next_batch(timeout=5000.0)
+        if t0 is None:
+            t0 = clock.now()
+        done[g] += 1
+        t_next[g] = max(clock.now(), t_next[g]) + STEP_TIME
+    return sum(done) * BATCH / max(clock.now() - t0, 1e-9)
+
+
+def run() -> str:
+    lines = [f"{'loader':16s} {'tier':5s} {'img/s':>8s} {'% of bound':>10s} "
+             f"{'paper':>7s}"]
+    rows = []
+    for name, fn in [("cassandra-dali", run_ours), ("mosaicml-sd", run_sd)]:
+        for route in ("low", "med", "high"):
+            v = fn(route)
+            pct = 100.0 * v / NO_IO_IMGS_PER_S
+            lines.append(f"{name:16s} {route:5s} {v:8.0f} {pct:9.1f}% "
+                         f"{PAPER[name][route]:>7d}")
+            rows.append(f"{name},{route},{v:.0f},{pct:.1f},"
+                        f"{PAPER[name][route]}")
+    write_csv("table4_training.csv",
+              "loader,tier,img_per_s,pct_of_bound,paper_img_per_s", rows)
+    return "\n".join(lines)
+
+
+def main() -> None:
+    print("# Table 4 — training throughput (8 consumers, no-I/O bound "
+          f"{NO_IO_IMGS_PER_S:.0f} img/s)")
+    print(run())
+
+
+if __name__ == "__main__":
+    main()

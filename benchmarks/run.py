@@ -1,0 +1,27 @@
+"""Benchmark harness — one module per paper table/figure + roofline.
+
+``PYTHONPATH=src python -m benchmarks.run [name ...]``
+Prints each benchmark's table and writes CSVs under results/.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+ALL = ["tightloop", "training", "batch_times", "connections", "backends",
+       "ramp", "roofline"]
+
+
+def main() -> None:
+    names = sys.argv[1:] or ALL
+    for name in names:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["main"])
+        t0 = time.time()
+        print(f"\n{'='*72}\n== bench_{name}\n{'='*72}")
+        mod.main()
+        print(f"-- bench_{name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

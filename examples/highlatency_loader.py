@@ -1,0 +1,39 @@
+"""The paper's core result as a demo: out-of-order vs in-order prefetching
+over a simulated intercontinental (150 ms RTT) link — Fig. 4 / Sec. 4.3.1.
+
+Run: PYTHONPATH=src python examples/highlatency_loader.py
+"""
+
+import numpy as np
+
+from repro.core import KVStore, LoaderConfig, CassandraLoader, tight_loop
+from repro.data.datasets import SyntheticImageDataset, ingest
+
+
+def main() -> None:
+    store = KVStore()
+    uuids = ingest(store, SyntheticImageDataset(n_samples=120_000, seed=0))
+    print(f"dataset: {len(uuids)} images, {store.total_bytes()/1e9:.1f} GB "
+          "(ImageNet-1k statistics), stored in the Cassandra-model KV store\n")
+
+    print(f"{'strategy':26s} {'throughput':>12s} {'batch gap p50/p99/max (ms)':>28s}")
+    for ooo, ramp, label in [
+        (False, False, "in-order, eager fill"),
+        (False, True, "in-order, incremental"),
+        (True, True, "OOO + incremental (paper)"),
+    ]:
+        cfg = LoaderConfig(batch_size=512, prefetch_buffers=16, io_threads=16,
+                           out_of_order=ooo, incremental_ramp=ramp,
+                           route="high", backend="scylla", seed=2)
+        res = tight_loop(CassandraLoader(store, uuids, cfg), n_batches=200)
+        bt = res["batch_times"][20:] * 1e3
+        print(f"{label:26s} {res['throughput_Bps']/1e9:9.2f} GB/s "
+              f"{np.percentile(bt,50):8.0f} /{np.percentile(bt,99):5.0f} "
+              f"/{bt.max():5.0f}")
+    print("\nOOO assembles batches from whichever samples arrive first, so a "
+          "congested route never gates the pipeline (labels travel with "
+          "features — any sample is self-contained).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Quickstart: the paper's full data path in ~60 seconds on a laptop.
+
+1. ingest a synthetic dataset (data + metadata, atomic inserts) into the
+   Cassandra-model KV store;
+2. create entity-independent train/val splits from metadata (Sec. 3.2);
+3. load batches over a simulated 150 ms-RTT intercontinental link with
+   out-of-order, incremental prefetching (Sec. 3.4);
+4. feed a few train steps of a tiny LM through the JAX pipeline.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.core import (KVStore, LoaderConfig, SplitSpec, create_splits)
+from repro.data.datasets import SyntheticTokenDataset, ingest
+from repro.models import build_model
+from repro.core.loader import CassandraLoader
+from repro.data.pipeline import DeviceFeed
+from repro.train.optimizer import OptimizerConfig
+from repro.train.step import init_state, make_train_step
+
+
+def main() -> None:
+    # 1. ingest ------------------------------------------------------------
+    store = KVStore()
+    uuids = ingest(store, SyntheticTokenDataset(n_samples=2048, seq_len=64,
+                                                vocab=2048, seed=0))
+    print(f"ingested {len(uuids)} samples "
+          f"({store.total_bytes() / 1e6:.1f} MB, data+metadata atomic)")
+
+    # 2. automatic splits ----------------------------------------------------
+    splits = create_splits(store.scan_metadata(),
+                           SplitSpec(fractions=(0.9, 0.1), seed=0))
+    print({k: len(v) for k, v in splits.items()}, "(entity-independent)")
+
+    # 3. network loader: 150 ms RTT, out-of-order + incremental prefetch ----
+    loader = CassandraLoader(store, splits["train"], LoaderConfig(
+        batch_size=32, prefetch_buffers=8, io_threads=4, route="high",
+        out_of_order=True, incremental_ramp=True, materialize=True, seed=0))
+
+    # 4. train a tiny LM from the stream ------------------------------------
+    cfg = ArchConfig(name="quickstart-lm", family="dense", n_layers=2,
+                     d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                     vocab=2048, head_dim=32, dtype="float32", remat=False)
+    model = build_model(cfg)
+    opt = OptimizerConfig(peak_lr=3e-3, warmup_steps=5, total_steps=40)
+    state = init_state(model, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+
+    feed = DeviceFeed(loader, seq_len=64)
+    for i in range(40):
+        batch, _ = next(feed)
+        state, metrics = step(state, {"tokens": batch["tokens"],
+                                      "loss_mask": batch["loss_mask"]})
+        if (i + 1) % 10 == 0:
+            print(f"step {i+1:3d} loss {float(metrics['loss']):.4f} "
+                  f"(loader: {loader.prefetcher.describe()})")
+    st = loader.stats
+    print(f"loader throughput {st.throughput(skip=2)/1e6:.1f} MB/s over a "
+          f"simulated 150 ms-RTT link; batch-gap p99 "
+          f"{1e3 * float(__import__('numpy').percentile(st.batch_times(1), 99)):.0f} ms")
+    loader.close()
+
+
+if __name__ == "__main__":
+    main()

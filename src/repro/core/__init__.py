@@ -1,0 +1,24 @@
+"""repro.core — the paper's contribution: network data loading with
+out-of-order, incremental prefetching over NoSQL storage."""
+
+from .batch_loader import AssembledBatch, BatchAssembler
+from .cluster import Cluster, TokenRing
+from .connection import ConnectionPool, FetchResult
+from .kvstore import DataRow, KVStore, MetaRow, make_uuid, token_of
+from .loader import CassandraLoader, LoaderConfig, consume_with_step_time, tight_loop
+from .netsim import (BACKENDS, CASSANDRA, SCYLLA, TIERS, Clock, RealClock,
+                     VirtualClock)
+from .prefetcher import (EpochPlan, InOrderPrefetcher, OutOfOrderPrefetcher,
+                         PrefetchConfig, make_prefetcher)
+from .splits import SplitSpec, check_entity_independence, create_splits
+
+__all__ = [
+    "AssembledBatch", "BatchAssembler", "Cluster", "TokenRing",
+    "ConnectionPool", "FetchResult", "DataRow", "KVStore", "MetaRow",
+    "make_uuid", "token_of", "CassandraLoader", "LoaderConfig",
+    "consume_with_step_time", "tight_loop", "BACKENDS", "CASSANDRA", "SCYLLA",
+    "TIERS", "Clock", "RealClock", "VirtualClock", "EpochPlan",
+    "InOrderPrefetcher", "OutOfOrderPrefetcher", "PrefetchConfig",
+    "make_prefetcher", "SplitSpec", "check_entity_independence",
+    "create_splits",
+]

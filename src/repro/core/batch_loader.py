@@ -1,0 +1,108 @@
+"""Batch assembly (paper Fig. 2): requests fan out, callbacks fan in.
+
+After the last sample of a batch arrives, the output tensor is allocated
+contiguously in one shot and samples are copied in by a thread pool; the
+batch becomes available when the copy completes.  In virtual-clock mode the
+copy is *modelled* (bytes / host-copy bandwidth); in real-clock mode the copy
+actually happens into a preallocated numpy arena (shared-memory analogue).
+"""
+
+from __future__ import annotations
+
+import uuid as _uuid
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from .connection import ConnectionPool, FetchResult
+from .netsim import Clock
+
+HOST_COPY_BANDWIDTH = 20.0e9  # bytes/s, multi-threaded memcpy into the arena
+
+
+@dataclass
+class AssembledBatch:
+    """One output batch: features+labels, ready for the device feed."""
+
+    seq: int
+    samples: List[FetchResult]
+    t_first_issue: float
+    t_last_arrival: float
+    t_ready: float
+    epoch: int = 0
+
+    @property
+    def nbytes(self) -> int:
+        return sum(s.size for s in self.samples)
+
+    @property
+    def labels(self) -> np.ndarray:
+        return np.asarray([s.label for s in self.samples], dtype=np.int32)
+
+    def payloads(self) -> List[Optional[bytes]]:
+        return [s.payload for s in self.samples]
+
+    @property
+    def uuids(self) -> List[_uuid.UUID]:
+        return [s.uuid for s in self.samples]
+
+
+class BatchAssembler:
+    """Models (or performs) the contiguous-allocation + parallel-copy stage."""
+
+    def __init__(self, clock: Clock, copy_bandwidth: float = HOST_COPY_BANDWIDTH,
+                 real_copy: bool = False) -> None:
+        self._clock = clock
+        self._copy_bw = copy_bandwidth
+        self._real_copy = real_copy
+        self.bytes_assembled = 0
+
+    def assemble(self, seq: int, epoch: int, samples: List[FetchResult],
+                 on_ready: Callable[[AssembledBatch], None]) -> None:
+        t_arr = max(s.t_done for s in samples)
+        nbytes = sum(s.size for s in samples)
+        self.bytes_assembled += nbytes
+        if self._real_copy:
+            # Single contiguous arena; copies are cheap at test scale.
+            arena = bytearray(nbytes)
+            off = 0
+            for s in samples:
+                if s.payload is not None:
+                    arena[off:off + len(s.payload)] = s.payload
+                off += s.size
+        delay = nbytes / self._copy_bw
+        batch = AssembledBatch(seq=seq, samples=list(samples),
+                               t_first_issue=min(s.t_issued for s in samples),
+                               t_last_arrival=t_arr,
+                               t_ready=self._clock.now() + delay,
+                               epoch=epoch)
+        self._clock.schedule(delay, on_ready, batch)
+
+
+class BatchRequest:
+    """In-order unit of work: all UUIDs of one batch requested at once."""
+
+    def __init__(self, seq: int, epoch: int, uuids: List[_uuid.UUID],
+                 pool: ConnectionPool, assembler: BatchAssembler,
+                 on_ready: Callable[[AssembledBatch], None]) -> None:
+        self.seq = seq
+        self.epoch = epoch
+        self._order = list(uuids)          # batch composition is fixed (in-order)
+        self._results: dict = {}
+        self._want = len(uuids)
+        self._assembler = assembler
+        self._on_ready = on_ready
+        for key in uuids:  # all requests posted to the driver at once
+            pool.fetch(key, self._one_done)
+
+    def _one_done(self, res: FetchResult) -> None:
+        self._results[res.uuid] = res
+        if len(self._results) == self._want:
+            ordered = [self._results[u] for u in self._order]
+            self._assembler.assemble(self.seq, self.epoch, ordered,
+                                     self._on_ready)
+
+
+__all__ = ["AssembledBatch", "BatchAssembler", "BatchRequest",
+           "HOST_COPY_BANDWIDTH"]

@@ -1,0 +1,122 @@
+"""Client-side connection pool: io-threads × 2 connections, token-aware routing.
+
+Mirrors the paper's driver usage (Sec. 3.3): multiple low-level I/O threads,
+each holding two TCP connections; up to 1024 concurrent requests per
+connection; completions delivered via callbacks (no busy waiting).
+
+Extensions beyond the paper (flagged):
+  * hedged requests — if a replica hasn't answered within ``hedge_after``
+    seconds, a duplicate request is sent to another replica and the first
+    response wins.  This is our straggler-mitigation addition for multi-node
+    clusters; it is off by default to keep the paper-faithful baseline exact.
+"""
+
+from __future__ import annotations
+
+import uuid as _uuid
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from .cluster import Cluster
+from .kvstore import DataRow
+from .netsim import Clock, RateResource, RouteProfile, SimConnection, TIERS, NIC_BANDWIDTH
+
+
+@dataclass
+class FetchResult:
+    uuid: _uuid.UUID
+    label: int
+    size: int
+    payload: Optional[bytes]
+    t_issued: float
+    t_done: float
+    conn_id: int
+    hedged: bool = False
+
+
+class ConnectionPool:
+    """All connections of one client process (one training host)."""
+
+    def __init__(self, clock: Clock, cluster: Cluster, route: RouteProfile | str,
+                 io_threads: int = 8, conns_per_thread: int = 2, seed: int = 99,
+                 hedge_after: Optional[float] = None,
+                 materialize: bool = False,
+                 client_ingress_bandwidth: float = NIC_BANDWIDTH) -> None:
+        if isinstance(route, str):
+            route = TIERS[route]
+        self.clock = clock
+        self.cluster = cluster
+        self.route = route
+        self.materialize = materialize
+        self.hedge_after = hedge_after
+        self._rng = np.random.default_rng(seed)
+        self.ingress = RateResource("client/ingress", client_ingress_bandwidth)
+        n_conns = io_threads * conns_per_thread
+        node_list = list(cluster.nodes.values())
+        self.connections: List[SimConnection] = []
+        self._conns_by_node: Dict[str, List[SimConnection]] = {n.name: [] for n in node_list}
+        for cid in range(n_conns):
+            node = node_list[cid % len(node_list)]
+            conn = SimConnection(cid, clock, node, route,
+                                 np.random.default_rng(seed + 1009 * cid), self.ingress)
+            self.connections.append(conn)
+            self._conns_by_node[node.name].append(conn)
+        self.requests_sent = 0
+        self.bytes_received = 0
+
+    # -- routing ---------------------------------------------------------
+    def _pick_connection(self, key: _uuid.UUID,
+                         exclude: Optional[SimConnection] = None) -> SimConnection:
+        """Token-aware: least-loaded connection to any replica of ``key``."""
+        replicas = self.cluster.ring.replicas(key, self.cluster.rf)
+        candidates: List[SimConnection] = []
+        for name in replicas:
+            candidates.extend(self._conns_by_node.get(name, []))
+        if not candidates:  # client holds no connection to a replica: any conn
+            candidates = self.connections
+        pool = [c for c in candidates if c is not exclude] or candidates
+        return min(pool, key=lambda c: (c.inflight, c.conn_id))
+
+    # -- fetch -------------------------------------------------------------
+    def fetch(self, key: _uuid.UUID, on_done: Callable[[FetchResult], None]) -> None:
+        """Single-row read: features + label in one query (Sec. 3.1)."""
+        row = self.cluster.store.get_data(key)
+        t0 = self.clock.now()
+        state = {"done": False}
+
+        def complete(conn: SimConnection, hedged: bool, t_done: float) -> None:
+            if state["done"]:
+                return  # a hedge lost the race
+            state["done"] = True
+            self.bytes_received += row.size
+            payload = row.materialize() if self.materialize else row.payload
+            on_done(FetchResult(uuid=key, label=row.label, size=row.size,
+                                payload=payload, t_issued=t0, t_done=t_done,
+                                conn_id=conn.conn_id, hedged=hedged))
+
+        conn = self._pick_connection(key)
+        self.requests_sent += 1
+        conn.request(row.size, lambda t: complete(conn, False, t))
+
+        if self.hedge_after is not None:
+            def maybe_hedge() -> None:
+                if state["done"]:
+                    return
+                backup = self._pick_connection(key, exclude=conn)
+                self.requests_sent += 1
+                backup.request(row.size, lambda t: complete(backup, True, t))
+
+            self.clock.schedule(self.hedge_after, maybe_hedge)
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def inflight(self) -> int:
+        return sum(c.inflight for c in self.connections)
+
+    def throughput_traces(self, window: float = 0.5):
+        return {c.conn_id: c.throughput_series(window) for c in self.connections}
+
+
+__all__ = ["ConnectionPool", "FetchResult"]

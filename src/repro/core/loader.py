@@ -1,0 +1,131 @@
+"""Top-level loader — the ``fn.crs4.cassandra(...)`` analogue (Listing 3).
+
+One object wires together: a cluster (or a handle to a shared one), the
+client connection pool, the epoch plan, and a prefetching strategy.  It is
+the single public entry point used by the data pipeline, the benchmarks and
+the examples.
+"""
+
+from __future__ import annotations
+
+import uuid as _uuid
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from .cluster import Cluster
+from .connection import ConnectionPool
+from .kvstore import KVStore
+from .netsim import Clock, RealClock, TIERS, VirtualClock
+from .prefetcher import EpochPlan, PrefetchConfig, make_prefetcher
+
+
+@dataclass
+class LoaderConfig:
+    """Mirrors the plugin arguments of the paper's Listing 3 (+ sim knobs)."""
+
+    batch_size: int = 512
+    prefetch_buffers: int = 8
+    io_threads: int = 8
+    conns_per_thread: int = 2
+    out_of_order: bool = True
+    incremental_ramp: bool = True
+    ramp_every: int = 4
+    route: str = "high"             # local | low | med | high
+    backend: str = "scylla"         # scylla | cassandra
+    n_nodes: int = 1
+    replication_factor: int = 1
+    hedge_after: Optional[float] = None
+    seed: int = 0
+    shard_id: int = 0               # per-host / per-GPU shard of the UUID list
+    num_shards: int = 1
+    materialize: bool = False       # deliver real payload bytes
+    virtual_clock: bool = True
+
+
+class CassandraLoader:
+    """Iterable over AssembledBatch with checkpointable position."""
+
+    def __init__(self, store: KVStore, uuids: List[_uuid.UUID],
+                 cfg: LoaderConfig, clock: Optional[Clock] = None,
+                 cluster: Optional[Cluster] = None) -> None:
+        self.cfg = cfg
+        self.clock = clock or (VirtualClock() if cfg.virtual_clock else RealClock())
+        self.cluster = cluster or Cluster(
+            self.clock, store, backend=cfg.backend, n_nodes=cfg.n_nodes,
+            rf=cfg.replication_factor, seed=cfg.seed + 5)
+        self.pool = ConnectionPool(
+            self.clock, self.cluster, TIERS[cfg.route],
+            io_threads=cfg.io_threads, conns_per_thread=cfg.conns_per_thread,
+            seed=cfg.seed + 11, hedge_after=cfg.hedge_after,
+            materialize=cfg.materialize)
+        self.plan = EpochPlan(uuids, seed=cfg.seed, shard_id=cfg.shard_id,
+                              num_shards=cfg.num_shards)
+        pcfg = PrefetchConfig(batch_size=cfg.batch_size,
+                              num_buffers=cfg.prefetch_buffers,
+                              out_of_order=cfg.out_of_order,
+                              incremental_ramp=cfg.incremental_ramp,
+                              ramp_every=cfg.ramp_every)
+        self.prefetcher = make_prefetcher(self.clock, self.pool, self.plan, pcfg,
+                                          real_copy=cfg.materialize)
+
+    # -- iteration ---------------------------------------------------------
+    def start(self, epoch: int = 0, cursor: int = 0) -> "CassandraLoader":
+        self.prefetcher.start(epoch, cursor)
+        return self
+
+    def next_batch(self, timeout: float = 600.0):
+        return self.prefetcher.next_batch(timeout=timeout)
+
+    def __iter__(self):
+        while True:
+            yield self.next_batch()
+
+    # -- checkpointing ------------------------------------------------------
+    def state(self) -> dict:
+        return self.prefetcher.state()
+
+    @property
+    def stats(self):
+        return self.prefetcher.stats
+
+    def batches_per_epoch(self) -> int:
+        return len(self.plan) // self.cfg.batch_size
+
+    def close(self) -> None:
+        if isinstance(self.clock, RealClock):
+            self.clock.close()
+
+
+def tight_loop(loader: CassandraLoader, n_batches: int,
+               timeout: float = 600.0) -> dict:
+    """Paper Sec. 4.2.1: consume as fast as possible, no decode/GPU work."""
+    loader.start()
+    for _ in range(n_batches):
+        loader.next_batch(timeout=timeout)
+    st = loader.stats
+    return {
+        "throughput_Bps": st.throughput(skip=min(2, n_batches - 2)),
+        "batches": n_batches,
+        "batch_times": st.batch_times(skip=1),
+        "disk_bytes": loader.cluster.total_disk_bytes(),
+        "net_bytes": loader.pool.bytes_received,
+    }
+
+
+def consume_with_step_time(loader: CassandraLoader, n_batches: int,
+                           step_time: float, timeout: float = 600.0) -> dict:
+    """Training-consumer model: one fixed-cost step per batch (Sec. 4.2.2)."""
+    loader.start()
+    for _ in range(n_batches):
+        loader.next_batch(timeout=timeout)
+        loader.clock.sleep(step_time)
+    st = loader.stats
+    return {
+        "samples_per_s": st.samples_per_second(loader.cfg.batch_size,
+                                               skip=min(2, n_batches - 2)),
+        "batch_times": st.batch_times(skip=1),
+    }
+
+
+__all__ = ["LoaderConfig", "CassandraLoader", "tight_loop",
+           "consume_with_step_time"]

@@ -1,0 +1,236 @@
+"""Prefetching strategies (paper Sec. 3.4).
+
+``InOrderPrefetcher``  — classic k-buffer prefetch: batch i is assembled from
+exactly the samples of permutation slice i, so every batch waits for its
+slowest connection.
+
+``OutOfOrderPrefetcher`` — the paper's contribution: requests for up to k
+batches' worth of samples are in flight simultaneously and output batches are
+filled with whichever samples *arrive first*.  Valid because (a) training is
+robust to uniformly random permutations and (b) labels travel with features,
+so any sample is self-contained.
+
+Both support the *incremental ramp* (staggered buffer filling): instead of
+front-loading k batches of requests at t=0 (bursting the network to k× the
+steady rate), request one extra batch every ``ramp_every`` consumed — a
+transient of only +1/ramp_every (25% for the paper's value of 4).
+"""
+
+from __future__ import annotations
+
+import uuid as _uuid
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from .batch_loader import AssembledBatch, BatchAssembler, BatchRequest
+from .connection import ConnectionPool, FetchResult
+from .netsim import Clock
+from .stats import LoaderStats
+
+
+@dataclass
+class PrefetchConfig:
+    batch_size: int = 512
+    num_buffers: int = 8            # prefetch depth k (paper: e.g. 8 per GPU)
+    out_of_order: bool = True       # the paper's key optimization
+    incremental_ramp: bool = True   # staggered buffer filling
+    ramp_every: int = 4             # +1 extra batch every N consumed
+
+
+class EpochPlan:
+    """Seeded uniform permutation per epoch — the 'predetermined' future
+    requests that make prefetching possible (Sec. 3.4)."""
+
+    def __init__(self, uuids: List[_uuid.UUID], seed: int = 0,
+                 shard_id: int = 0, num_shards: int = 1) -> None:
+        if num_shards > 1:
+            # per-host shard of the global UUID list (multi-host loading):
+            # contiguous strips of the *shuffled* list stay unbiased.
+            self._uuids = list(uuids[shard_id::num_shards])
+        else:
+            self._uuids = list(uuids)
+        self._seed = seed
+
+    def __len__(self) -> int:
+        return len(self._uuids)
+
+    def permutation(self, epoch: int) -> List[_uuid.UUID]:
+        rng = np.random.default_rng((self._seed, epoch))
+        order = rng.permutation(len(self._uuids))
+        return [self._uuids[i] for i in order]
+
+    def iter_from(self, epoch: int, cursor: int) -> Iterator[tuple]:
+        """Infinite (epoch, uuid) stream starting at (epoch, cursor)."""
+        e = epoch
+        while True:
+            perm = self.permutation(e)
+            for i in range(cursor, len(perm)):
+                yield e, perm[i]
+            cursor = 0
+            e += 1
+
+
+class _PrefetcherBase:
+    def __init__(self, clock: Clock, pool: ConnectionPool, plan: EpochPlan,
+                 cfg: PrefetchConfig, assembler: Optional[BatchAssembler] = None,
+                 real_copy: bool = False) -> None:
+        self.clock = clock
+        self.pool = pool
+        self.plan = plan
+        self.cfg = cfg
+        self.assembler = assembler or BatchAssembler(clock, real_copy=real_copy)
+        self.stats = LoaderStats(clock)
+        self.consumed = 0               # batches handed to the consumer
+        self._epoch0 = 0
+        self._cursor0 = 0
+        self._started = False
+
+    # -- ramp ------------------------------------------------------------
+    def _target_depth(self) -> int:
+        """Allowed number of batches in flight (requests+ready) right now."""
+        k = self.cfg.num_buffers
+        if not self.cfg.incremental_ramp:
+            return k
+        # 1 buffer at start; +1 extra every ramp_every consumed.
+        return min(k, 1 + self.consumed // self.cfg.ramp_every)
+
+    # -- checkpoint/restart ------------------------------------------------
+    def state(self) -> dict:
+        """Loader position for fault-tolerant restart (batch granularity)."""
+        total = self.consumed * self.cfg.batch_size + self._cursor0
+        n = len(self.plan)
+        return {"epoch": self._epoch0 + total // n, "cursor": total % n,
+                "consumed": self.consumed}
+
+    def describe(self) -> str:
+        mode = "OOO" if self.cfg.out_of_order else "in-order"
+        ramp = "incremental" if self.cfg.incremental_ramp else "eager"
+        return f"{mode}/{ramp} k={self.cfg.num_buffers} B={self.cfg.batch_size}"
+
+
+class InOrderPrefetcher(_PrefetcherBase):
+    """Baseline strategy: per-batch request groups, in-order delivery."""
+
+    def __init__(self, *args, **kw) -> None:
+        super().__init__(*args, **kw)
+        self._ready: Dict[int, AssembledBatch] = {}
+        self._outstanding = 0
+        self._next_issue = 0
+        self._next_consume = 0
+        self._stream: Optional[Iterator] = None
+
+    def start(self, epoch: int = 0, cursor: int = 0) -> None:
+        self._epoch0, self._cursor0 = epoch, cursor
+        self._stream = self.plan.iter_from(epoch, cursor)
+        self._started = True
+        self._fill()
+
+    def _fill(self) -> None:
+        while self._outstanding + len(self._ready) < self._target_depth():
+            uuids, ep = [], 0
+            for _ in range(self.cfg.batch_size):
+                ep, u = next(self._stream)
+                uuids.append(u)
+            seq = self._next_issue
+            self._next_issue += 1
+            self._outstanding += 1
+            self.stats.on_issue(seq, len(uuids))
+            BatchRequest(seq, ep, uuids, self.pool, self.assembler, self._on_ready)
+
+    def _on_ready(self, batch: AssembledBatch) -> None:
+        self._outstanding -= 1
+        self._ready[batch.seq] = batch
+        self.stats.on_batch_ready(batch)
+
+    def next_batch(self, timeout: float = 600.0) -> AssembledBatch:
+        if not self._started:
+            self.start()
+        seq = self._next_consume
+        ok = self.clock.run_until(lambda: seq in self._ready, timeout=timeout)
+        if not ok:
+            raise TimeoutError(f"batch {seq} not ready after {timeout}s "
+                               f"({self.describe()})")
+        batch = self._ready.pop(seq)
+        self._next_consume += 1
+        self.consumed += 1
+        self.stats.on_consume(batch)
+        self._fill()
+        return batch
+
+
+class OutOfOrderPrefetcher(_PrefetcherBase):
+    """The paper's strategy: sample-level in-flight window, arrival-order
+    batch assembly."""
+
+    def __init__(self, *args, **kw) -> None:
+        super().__init__(*args, **kw)
+        self._pool_arrived: deque = deque()   # FetchResults in arrival order
+        self._samples_inflight = 0
+        self._ready: deque = deque()          # assembled batches, FIFO
+        self._assembling = 0
+        self._next_seq = 0
+        self._stream: Optional[Iterator] = None
+        self._cur_epoch = 0
+
+    def start(self, epoch: int = 0, cursor: int = 0) -> None:
+        self._epoch0, self._cursor0 = epoch, cursor
+        self._cur_epoch = epoch
+        self._stream = self.plan.iter_from(epoch, cursor)
+        self._started = True
+        self._fill()
+
+    def _fill(self) -> None:
+        B = self.cfg.batch_size
+        budget = self._target_depth() * B
+        while (self._samples_inflight + len(self._pool_arrived)
+               + self._assembling * B + len(self._ready) * B) < budget:
+            ep, u = next(self._stream)
+            self._cur_epoch = ep
+            self._samples_inflight += 1
+            self.pool.fetch(u, self._on_sample)
+
+    def _on_sample(self, res: FetchResult) -> None:
+        self._samples_inflight -= 1
+        self._pool_arrived.append(res)
+        self.stats.on_sample(res)
+        self._maybe_assemble()
+
+    def _maybe_assemble(self) -> None:
+        B = self.cfg.batch_size
+        while len(self._pool_arrived) >= B:
+            samples = [self._pool_arrived.popleft() for _ in range(B)]
+            seq = self._next_seq
+            self._next_seq += 1
+            self._assembling += 1
+            self.stats.on_issue(seq, B)
+            self.assembler.assemble(seq, self._cur_epoch, samples, self._on_ready)
+
+    def _on_ready(self, batch: AssembledBatch) -> None:
+        self._assembling -= 1
+        self._ready.append(batch)
+        self.stats.on_batch_ready(batch)
+
+    def next_batch(self, timeout: float = 600.0) -> AssembledBatch:
+        if not self._started:
+            self.start()
+        ok = self.clock.run_until(lambda: len(self._ready) > 0, timeout=timeout)
+        if not ok:
+            raise TimeoutError(f"no batch ready after {timeout}s ({self.describe()})")
+        batch = self._ready.popleft()
+        self.consumed += 1
+        self.stats.on_consume(batch)
+        self._fill()
+        return batch
+
+
+def make_prefetcher(clock: Clock, pool: ConnectionPool, plan: EpochPlan,
+                    cfg: PrefetchConfig, real_copy: bool = False):
+    cls = OutOfOrderPrefetcher if cfg.out_of_order else InOrderPrefetcher
+    return cls(clock, pool, plan, cfg, real_copy=real_copy)
+
+
+__all__ = ["PrefetchConfig", "EpochPlan", "InOrderPrefetcher",
+           "OutOfOrderPrefetcher", "make_prefetcher"]

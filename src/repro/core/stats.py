@@ -1,0 +1,90 @@
+"""Instrumentation: batch-time series, throughput windows, epoch summaries.
+
+Produces the raw material for the paper's Figs. 4-7 and Tables 3-4.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+class LoaderStats:
+    def __init__(self, clock) -> None:
+        self._clock = clock
+        self.batch_ready_t: List[float] = []
+        self.batch_consume_t: List[float] = []
+        self.batch_nbytes: List[int] = []
+        self.batch_wait: List[float] = []      # consumer-visible wait per batch
+        self.sample_arrive_t: List[float] = []
+        self.issues: List[tuple] = []
+        self._last_consume: Optional[float] = None
+
+    # -- hooks -------------------------------------------------------------
+    def on_issue(self, seq: int, n: int) -> None:
+        self.issues.append((self._clock.now(), seq, n))
+
+    def on_sample(self, res) -> None:
+        self.sample_arrive_t.append(res.t_done)
+
+    def on_batch_ready(self, batch) -> None:
+        self.batch_ready_t.append(batch.t_ready)
+
+    def on_consume(self, batch) -> None:
+        now = self._clock.now()
+        self.batch_consume_t.append(now)
+        self.batch_nbytes.append(batch.nbytes)
+        prev = self._last_consume if self._last_consume is not None else 0.0
+        # "batch loading time" as plotted in Fig. 4: gap between consecutive
+        # batch deliveries as seen by the consumer.
+        self.batch_wait.append(now - prev)
+        self._last_consume = now
+
+    # -- summaries -----------------------------------------------------------
+    def batch_times(self, skip: int = 0) -> np.ndarray:
+        return np.asarray(self.batch_wait[skip:], dtype=np.float64)
+
+    def throughput(self, skip: int = 0) -> float:
+        """Average bytes/s over consumed batches (epoch-style accounting)."""
+        if len(self.batch_consume_t) <= skip + 1:
+            return 0.0
+        t0 = self.batch_consume_t[skip]
+        t1 = self.batch_consume_t[-1]
+        nbytes = sum(self.batch_nbytes[skip + 1:])
+        return nbytes / max(t1 - t0, 1e-9)
+
+    def samples_per_second(self, batch_size: int, skip: int = 0) -> float:
+        if len(self.batch_consume_t) <= skip + 1:
+            return 0.0
+        t0, t1 = self.batch_consume_t[skip], self.batch_consume_t[-1]
+        n = (len(self.batch_consume_t) - skip - 1) * batch_size
+        return n / max(t1 - t0, 1e-9)
+
+    def throughput_windows(self, window: float = 0.5) -> List[tuple]:
+        """(t, bytes/s) aggregate over consumed batches."""
+        if not self.batch_consume_t:
+            return []
+        out, acc, w0, i = [], 0, 0.0, 0
+        end = self.batch_consume_t[-1]
+        while w0 <= end:
+            w1 = w0 + window
+            while i < len(self.batch_consume_t) and self.batch_consume_t[i] < w1:
+                acc += self.batch_nbytes[i]
+                i += 1
+            out.append((w0, acc / window))
+            acc, w0 = 0, w1
+        return out
+
+
+def summarize(values: np.ndarray) -> dict:
+    if values.size == 0:
+        return {"mean": 0.0, "std": 0.0, "p50": 0.0, "p99": 0.0, "max": 0.0}
+    return {"mean": float(values.mean()), "std": float(values.std()),
+            "p50": float(np.percentile(values, 50)),
+            "p99": float(np.percentile(values, 99)),
+            "max": float(values.max())}
+
+
+__all__ = ["LoaderStats", "summarize"]

@@ -1,0 +1,3 @@
+from .datasets import SyntheticImageDataset, SyntheticTokenDataset, ingest
+
+__all__ = ["SyntheticImageDataset", "SyntheticTokenDataset", "ingest"]

@@ -1,0 +1,65 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only — the
+kernels execute through the Pallas interpreter for correctness validation)
+and to False on a real TPU backend.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .crop_norm import crop_mirror_normalize as _cmn
+from .decode_attention import flash_decode as _flash_decode
+from .flash_attention import flash_attention as _flash_attention
+from .moe_gmm import grouped_matmul as _gmm
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            block_q=block_q, block_k=block_k,
+                            interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode(q, k, v, lengths, *, block_k=512, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _flash_decode(q, k, v, lengths, block_k=block_k,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("out_h", "out_w", "dtype",
+                                             "interpret"))
+def crop_mirror_normalize(img, oy, ox, mirror, mean, std, *, out_h, out_w,
+                          dtype=jnp.float32, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _cmn(img, oy, ox, mirror, mean, std, out_h, out_w, dtype,
+                interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d",
+                                             "interpret"))
+def grouped_matmul(x, w, *, block_c=128, block_f=128, block_d=512,
+                   interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _gmm(x, w, block_c=block_c, block_f=block_f, block_d=block_d,
+                interpret=interpret)
+
+
+__all__ = ["flash_attention", "flash_decode", "crop_mirror_normalize",
+           "grouped_matmul"]

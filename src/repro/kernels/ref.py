@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """q (B,H,S,D); k,v (B,K,T,D) -> (B,H,S,D). GQA by head folding."""
+    B, H, S, D = q.shape
+    K, T = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, S, D)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok &= qpos >= kpos
+    if window > 0:
+        ok &= (qpos - kpos) < window
+    s = jnp.where(ok, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, S, D).astype(q.dtype)
+
+
+def decode_reference(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array) -> jax.Array:
+    """Single-token decode. q (B,H,D); k,v (B,K,T,D); lengths (B,) valid
+    prefix lengths. -> (B,H,D)."""
+    B, H, D = q.shape
+    K, T = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, D)
+    s = jnp.einsum("bkgd,bktd->bkgt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    valid = jnp.arange(T)[None, :] < lengths[:, None]          # (B,T)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,bktd->bkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def crop_mirror_normalize_reference(img: jax.Array, oy: jax.Array,
+                                    ox: jax.Array, mirror: jax.Array,
+                                    mean: jax.Array, std: jax.Array,
+                                    out_h: int, out_w: int,
+                                    dtype=jnp.float32) -> jax.Array:
+    """img (B,H,W,C) uint8 -> (B,C,out_h,out_w), DALI crop_mirror_normalize.
+
+    oy/ox (B,) crop offsets, mirror (B,) bool, mean/std (C,) in 0..255 scale.
+    """
+    def one(im, y, x, m):
+        crop = jax.lax.dynamic_slice(im, (y, x, 0),
+                                     (out_h, out_w, im.shape[2]))
+        crop = jnp.where(m, crop[:, ::-1, :], crop)
+        out = (crop.astype(jnp.float32) - mean) / std
+        return out.transpose(2, 0, 1).astype(dtype)
+
+    return jax.vmap(one)(img, oy, ox, mirror)
+
+
+def gmm_reference(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Grouped (per-expert) matmul: x (E,C,d) @ w (E,d,f) -> (E,C,f)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+__all__ = ["mha_reference", "decode_reference",
+           "crop_mirror_normalize_reference", "gmm_reference"]

@@ -1,0 +1,66 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below happens only after the device count is pinned --------
+import argparse
+import json
+import sys
+import time
+
+from repro.configs.base import ARCH_IDS, applicable_shapes, get_arch
+from repro.launch.dryrun_lib import run_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="Multi-pod dry-run: lower+compile every (arch x shape) "
+                    "cell on the production mesh and dump roofline inputs.")
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="shape name or 'all' (applicable shapes only)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2x16x16 multi-pod mesh (default 16x16)")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="run each cell on single-pod AND multi-pod meshes")
+    ap.add_argument("--out", default="",
+                    help="append JSON-lines results to this file")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    meshes = []
+    if args.both_meshes:
+        meshes = [make_production_mesh(), make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+
+    failures = []
+    results = []
+    for arch_id in archs:
+        cfg = get_arch(arch_id)
+        shapes = (applicable_shapes(cfg) if args.shape == "all"
+                  else [args.shape])
+        for shape_name in shapes:
+            for mesh in meshes:
+                try:
+                    res = run_cell(arch_id, shape_name, mesh)
+                    results.append(res)
+                except Exception as e:  # a failure here is a sharding bug
+                    failures.append((arch_id, shape_name,
+                                     "x".join(map(str, mesh.devices.shape)),
+                                     repr(e)[:500]))
+                    print(f"[dryrun] FAIL {arch_id} {shape_name}: {e!r}",
+                          file=sys.stderr, flush=True)
+    if args.out:
+        with open(args.out, "a") as f:
+            for r in results:
+                f.write(json.dumps(r) + "\n")
+    print(f"[dryrun] {len(results)} cells OK, {len(failures)} failed")
+    for f_ in failures:
+        print("  FAIL:", *f_[:3])
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

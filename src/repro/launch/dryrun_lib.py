@@ -1,0 +1,240 @@
+"""Dry-run core: lower + compile every (arch x shape) cell on a mesh and
+extract memory / FLOP / collective statistics for the roofline analysis.
+
+Import this ONLY from an entry point that has already set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` (see dryrun.py);
+importing jax locks the device count.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, get_arch
+from repro.models import build_model
+from repro.sharding.rules import tree_shardings
+from repro.train.optimizer import OptimizerConfig
+from repro.train.step import (abstract_state, make_prefill_step,
+                              make_serve_step, make_train_step,
+                              state_logical_axes)
+
+# Per-arch memory policy (derived by napkin math, validated by the probe runs
+# recorded in EXPERIMENTS.md §Dry-run):
+#   * optimizer state dtype — int8 (grok: 314B params) or int8 + factored
+#     second moment (kimi: 1.03T params);
+#   * gradient-accumulation microbatch count for train_4k (divides the
+#     per-device activation footprint);
+#   * gradient accumulator dtype (bf16 for the two giants, f32 otherwise).
+OPT_STATE_DTYPE = {
+    "grok-1-314b": "int8",
+    "kimi-k2-1t-a32b": "int8_factored",
+}
+# With sequence-parallel activations, layer-boundary saves shrink 16x and
+# most archs need NO gradient accumulation (mb>1 would multiply FSDP weight
+# gathers by the microbatch count — the dominant collective cost otherwise).
+TRAIN_MICROBATCHES = {
+    "qwen3-4b": 1, "qwen3-14b": 1, "yi-34b": 1, "stablelm-1.6b": 1,
+    "whisper-tiny": 4, "grok-1-314b": 2, "kimi-k2-1t-a32b": 2,
+    "hymba-1.5b": 2, "xlstm-350m": 2, "internvl2-2b": 1,
+}
+ACCUM_DTYPE = {
+    "grok-1-314b": jnp.bfloat16,
+    "kimi-k2-1t-a32b": jnp.bfloat16,
+}
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op in the (SPMD) HLO module."""
+    out = {op: 0 for op in COLLECTIVE_OPS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for op in COLLECTIVE_OPS:
+            marker = f" {op}("
+            if marker in stripped and not stripped.startswith("//"):
+                # operands are the typed shapes after the opening paren;
+                # fall back to the output shape (start of line) if absent.
+                paren = stripped.index(marker) + len(marker)
+                operand_str = stripped[paren:]
+                shapes = _SHAPE_RE.findall(operand_str)
+                if not shapes:
+                    shapes = _SHAPE_RE.findall(stripped[:paren])[:1]
+                nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes
+                             if dt in _DTYPE_BYTES)
+                out[op] += nbytes
+                out["count"] += 1
+                break
+    out["total"] = sum(out[op] for op in COLLECTIVE_OPS)
+    return out
+
+
+def model_flops_estimate(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); decode counts one token/seq."""
+    from repro.models.params import count_params
+
+    model = build_model(cfg)
+    n_params = count_params(model.param_specs())
+    if cfg.n_experts and cfg.top_k:
+        # subtract inactive expert params
+        expert_params = 3 * cfg.d_model * cfg.d_ff * cfg.n_experts * cfg.n_layers
+        active = expert_params * cfg.top_k / cfg.n_experts
+        n_active = n_params - expert_params + active
+    else:
+        n_active = n_params
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # one new token per sequence
+    return 2.0 * n_active * tokens
+
+
+def build_cell(arch_id: str, shape_name: str, mesh,
+               opt_cfg: Optional[OptimizerConfig] = None,
+               microbatches: Optional[int] = None,
+               seq_parallel: bool = True):
+    """Returns (jitted_fn, abstract_args, cfg, shape) for a cell.
+
+    seq_parallel=True applies the Megatron-SP residual-stream constraint
+    (sequence-sharded layer-boundary activations); False is the naive
+    baseline recorded in EXPERIMENTS.md §Perf.
+    """
+    from repro.sharding.rules import make_act_constrainer, make_attn_constrainers
+
+    cfg = get_arch(arch_id)
+    model = build_model(cfg)
+    if seq_parallel:
+        from repro.sharding.rules import make_moe_constrainer
+        model.constrain_act = make_act_constrainer(mesh)
+        cq, ckv = make_attn_constrainers(mesh)
+        model.constrain_q = cq
+        model.constrain_kv = ckv
+        model.constrain_moe = make_moe_constrainer(mesh)
+    shape = SHAPES[shape_name]
+    profile = cfg.sharding_profile
+    if opt_cfg is None:
+        opt_cfg = OptimizerConfig(
+            state_dtype=OPT_STATE_DTYPE.get(cfg.name, "float32"))
+    if microbatches is None:
+        microbatches = TRAIN_MICROBATCHES.get(cfg.name, 1)
+
+    params_sh = tree_shardings(model.abstract_params(),
+                               model.param_logical_axes(), mesh, profile)
+    input_specs = model.input_specs(shape)
+    input_axes = model.input_logical_axes(shape)
+    inputs_sh = tree_shardings(input_specs, input_axes, mesh, profile)
+
+    if shape.kind == "train":
+        step = make_train_step(model, opt_cfg, microbatches=microbatches,
+                               accum_dtype=ACCUM_DTYPE.get(cfg.name,
+                                                           jnp.float32))
+        state = abstract_state(model, opt_cfg)
+        axes = state_logical_axes(model, opt_cfg)
+        # ZeRO-1: optimizer state is additionally sharded over the data axis
+        # regardless of the parameter profile (touched once per step, so the
+        # reshard cost is tiny; saves (8 bytes/param)/dp_size of HBM).
+        state_sh = {
+            "params": tree_shardings(state["params"], axes["params"], mesh,
+                                     profile),
+            "opt": tree_shardings(state["opt"], axes["opt"], mesh,
+                                  "fsdp_tp"),
+        }
+        jitted = jax.jit(step, in_shardings=(state_sh, inputs_sh),
+                         out_shardings=(state_sh, None), donate_argnums=(0,))
+        return jitted, (state, input_specs), cfg, shape
+    if shape.kind == "prefill":
+        step = make_prefill_step(model)
+        jitted = jax.jit(step, in_shardings=(params_sh, inputs_sh))
+        return jitted, (model.abstract_params(), input_specs), cfg, shape
+    # decode
+    step = make_serve_step(model)
+    cache_spec = input_specs["cache"]
+    cache_sh = inputs_sh["cache"]
+    tok_spec, tok_sh = input_specs["tokens"], inputs_sh["tokens"]
+    jitted = jax.jit(step, in_shardings=(params_sh, cache_sh, tok_sh),
+                     out_shardings=(None, cache_sh), donate_argnums=(1,))
+    return jitted, (model.abstract_params(), cache_spec, tok_spec), cfg, shape
+
+
+def run_cell(arch_id: str, shape_name: str, mesh, verbose: bool = True
+             ) -> Dict[str, Any]:
+    t0 = time.time()
+    jitted, args, cfg, shape = build_cell(arch_id, shape_name, mesh)
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    # loop-multiplicity-aware analysis (cost_analysis counts scan bodies once)
+    from repro.launch.hlo_cost import analyze as hlo_analyze
+    hc = hlo_analyze(hlo)
+    coll = {k: float(v) for k, v in hc["collectives"].items()}
+    coll["total"] = float(hc["collective_bytes"])
+    n_dev = int(np.prod(mesh.devices.shape))
+
+    result = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "devices": n_dev,
+        "flops_per_device": float(hc["flops"]),
+        "bytes_per_device": float(hc["bytes"]),
+        "collective_bytes_per_device": coll,
+        "raw_cost_analysis": {"flops": float(cost.get("flops", -1)),
+                              "bytes": float(cost.get("bytes accessed", -1))},
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", -1),
+            "output_bytes": getattr(mem, "output_size_in_bytes", -1),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", -1),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", -1),
+        },
+        "model_flops_total": model_flops_estimate(cfg, shape),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    if verbose:
+        m = result["memory"]
+        peak = (m["argument_bytes"] + m["temp_bytes"] + m["output_bytes"]
+                - max(m["alias_bytes"], 0))
+        print(f"[dryrun] {arch_id:18s} {shape_name:12s} mesh={result['mesh']:9s}"
+              f" flops/dev={result['flops_per_device']:.3e}"
+              f" bytes/dev={result['bytes_per_device']:.3e}"
+              f" coll/dev={coll['total']:.3e}"
+              f" mem(arg+tmp+out-alias)={peak / 2**30:.2f} GiB"
+              f" lower={t_lower:.0f}s compile={t_compile:.0f}s", flush=True)
+    return result
+
+
+__all__ = ["build_cell", "run_cell", "collective_bytes_from_hlo",
+           "model_flops_estimate", "OPT_STATE_DTYPE", "TRAIN_MICROBATCHES",
+           "ACCUM_DTYPE", "COLLECTIVE_OPS"]

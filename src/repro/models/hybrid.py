@@ -1,0 +1,191 @@
+"""Hymba-style hybrid blocks: parallel attention + Mamba heads.
+
+Each block runs a sliding-window GQA attention path and a Mamba (selective
+SSM) path over the same normalized input and averages the two (the paper's
+learnable per-head fusion is simplified to a learned scalar mix; meta-tokens
+are elided — noted in DESIGN.md).  SWA + SSM keeps the block sub-quadratic,
+which is why this architecture runs the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+from . import attention as attn
+from . import ssm as ssm_mod
+from .layers import (embed, embed_spec, rmsnorm, rmsnorm_spec, softmax_xent,
+                     swiglu, swiglu_spec, unembed)
+from .params import P, abstract_params, init_params, logical_axes, stack_layer_specs
+from .transformer import DENSE_ATTN_MAX_SEQ
+
+
+class HymbaModel:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.d_inner = cfg.d_model          # mamba inner width
+        self.constrain_act = None
+        self.constrain_q = None
+        self.constrain_kv = None
+
+    def block_spec(self) -> Dict:
+        c = self.cfg
+        return {
+            "ln1": rmsnorm_spec(c.d_model),
+            "attn": attn.gqa_spec(c.d_model, c.n_heads, c.n_kv_heads,
+                                  c.resolved_head_dim),
+            "mamba": ssm_mod.mamba_spec(c.d_model, self.d_inner, c.ssm_state),
+            "mix": P((1,), (None,), init="zeros"),     # sigmoid(mix) blend
+            "ln2": rmsnorm_spec(c.d_model),
+            "mlp": swiglu_spec(c.d_model, c.d_ff),
+        }
+
+    def param_specs(self) -> Dict:
+        c = self.cfg
+        return {"embed": embed_spec(c.vocab, c.d_model),
+                "blocks": stack_layer_specs(self.block_spec(), c.n_layers),
+                "ln_f": rmsnorm_spec(c.d_model)}
+
+    def init(self, key, dtype=None) -> Dict:
+        return init_params(self.param_specs(), key, dtype or self.dtype)
+
+    def abstract_params(self) -> Dict:
+        return abstract_params(self.param_specs(), self.dtype)
+
+    def param_logical_axes(self) -> Dict:
+        return logical_axes(self.param_specs())
+
+    # -- full-sequence forward -------------------------------------------------
+    def forward(self, params: Dict, tokens: jax.Array,
+                extras: Optional[Dict] = None) -> Tuple[jax.Array, Dict]:
+        c = self.cfg
+        B, S = tokens.shape
+        x = embed(params["embed"], tokens, self.dtype)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        def body(h, layer):
+            y = rmsnorm(layer["ln1"], h, c.norm_eps)
+            q, k, v = attn.project_qkv(layer["attn"], y)
+            q = attn.apply_rope(q, positions, c.rope_theta)
+            k = attn.apply_rope(k, positions, c.rope_theta)
+            k = attn.expand_kv(k, c.n_heads)
+            v = attn.expand_kv(v, c.n_heads)
+            if self.constrain_q is not None:
+                q = self.constrain_q(q)
+                k = self.constrain_kv(k)
+                v = self.constrain_kv(v)
+            if S <= DENSE_ATTN_MAX_SEQ:
+                ao = attn.dense_attention(q, k, v, positions[0], positions[0],
+                                          causal=True, window=c.window)
+            else:
+                ao = attn.chunked_attention(q, k, v, positions[0], positions[0],
+                                            causal=True, window=c.window)
+            ao = attn.project_out(layer["attn"], ao)
+            mo, _ = ssm_mod.mamba_apply(layer["mamba"], y)
+            mix = jax.nn.sigmoid(layer["mix"].astype(jnp.float32))[0]
+            fused = (mix * ao.astype(jnp.float32)
+                     + (1.0 - mix) * mo.astype(jnp.float32)).astype(h.dtype)
+            h = h + fused
+            y = rmsnorm(layer["ln2"], h, c.norm_eps)
+            return cst(h + swiglu(layer["mlp"], y)), None
+
+        cst = self.constrain_act or (lambda t: t)
+        x = cst(x)
+        fn = jax.checkpoint(body) if c.remat else body
+        x, _ = jax.lax.scan(fn, x, params["blocks"])
+        x = rmsnorm(params["ln_f"], x, c.norm_eps)
+        return unembed(params["embed"], x), {}
+
+    def train_loss(self, params: Dict, batch: Dict) -> Tuple[jax.Array, Dict]:
+        tokens = batch["tokens"]
+        logits, _ = self.forward(params, tokens, batch)
+        mask = batch.get("loss_mask")
+        loss = softmax_xent(logits[:, :-1], tokens[:, 1:],
+                            mask[:, 1:] if mask is not None else None)
+        return loss, {"loss": loss, "xent": loss}
+
+    # -- decode ------------------------------------------------------------
+    def init_cache(self, batch: int, seq_len: int) -> Dict:
+        c = self.cfg
+        W = min(c.window or seq_len, seq_len)
+        kv = attn.init_kv_cache(batch, W, c.n_kv_heads, c.resolved_head_dim,
+                                self.dtype)
+        kv_stack = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                *[kv for _ in range(c.n_layers)])
+        ms = ssm_mod.mamba_init_state(batch, self.d_inner, c.ssm_state,
+                                      dtype=self.dtype)
+        ms_stack = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (c.n_layers,) + x.shape), ms)
+        return {"kv": kv_stack, "mamba": ms_stack}
+
+    def cache_specs(self, batch: int, seq_len: int) -> Dict:
+        c = self.cfg
+        W = min(c.window or seq_len, seq_len)
+        kv = attn.cache_specs(batch, W, c.n_kv_heads, c.resolved_head_dim,
+                              self.dtype)
+        kv_stack = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((c.n_layers,) + s.shape, s.dtype), kv)
+        ms = ssm_mod.mamba_state_specs(batch, self.d_inner, c.ssm_state,
+                                       dtype=self.dtype)
+        ms_stack = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((c.n_layers,) + s.shape, s.dtype), ms)
+        return {"kv": kv_stack, "mamba": ms_stack}
+
+    def decode_step(self, params: Dict, cache: Dict, tokens: jax.Array
+                    ) -> Tuple[jax.Array, Dict]:
+        c = self.cfg
+        x = embed(params["embed"], tokens, self.dtype)
+
+        def body(x, scanned):
+            layer, kv_cache, m_state = scanned
+            y = rmsnorm(layer["ln1"], x, c.norm_eps)
+            ao, new_kv = attn.decode_attention(layer["attn"], kv_cache, y,
+                                               window=c.window,
+                                               rope_theta=c.rope_theta)
+            mo, new_ms = ssm_mod.mamba_apply(layer["mamba"], y, m_state)
+            mix = jax.nn.sigmoid(layer["mix"].astype(jnp.float32))[0]
+            fused = (mix * ao.astype(jnp.float32)
+                     + (1.0 - mix) * mo.astype(jnp.float32)).astype(x.dtype)
+            x = x + fused
+            y = rmsnorm(layer["ln2"], x, c.norm_eps)
+            return x + swiglu(layer["mlp"], y), (new_kv, new_ms)
+
+        x, (new_kv, new_ms) = jax.lax.scan(
+            body, x, (params["blocks"], cache["kv"], cache["mamba"]))
+        x = rmsnorm(params["ln_f"], x, c.norm_eps)
+        logits = unembed(params["embed"], x)
+        return logits, {"kv": new_kv, "mamba": new_ms}
+
+    # -- shapes --------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict:
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                    "cache": self.cache_specs(B, S)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+    def make_batch(self, key: jax.Array, shape: ShapeConfig) -> Dict:
+        c = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            return {"tokens": jax.random.randint(key, (B, 1), 0, c.vocab),
+                    "cache": self.init_cache(B, S)}
+        return {"tokens": jax.random.randint(key, (B, S), 0, c.vocab)}
+
+    def input_logical_axes(self, shape: ShapeConfig) -> Dict:
+        if shape.kind == "decode":
+            kv = {"k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                  "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                  "pos": ("layers",)}
+            ms = {"h": ("layers", "batch", "d_inner", "state"),
+                  "conv": ("layers", "batch", "conv_k", "d_inner")}
+            return {"tokens": ("batch", None), "cache": {"kv": kv, "mamba": ms}}
+        return {"tokens": ("batch", "seq")}
+
+
+__all__ = ["HymbaModel"]

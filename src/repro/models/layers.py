@@ -1,0 +1,155 @@
+"""Shared layers: norms, RoPE, MLPs, embeddings — pure-JAX, spec-based."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .params import P
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(d: int) -> Dict:
+    return {"scale": P((d,), ("d_model",), init="ones")}
+
+
+def rmsnorm(params: Dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_spec(d: int) -> Dict:
+    return {"scale": P((d,), ("d_model",), init="ones"),
+            "bias": P((d,), ("d_model",), init="zeros")}
+
+
+def layernorm(params: Dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = x * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10_000.0) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0
+               ) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                     # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., :, None, :]                     # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(dt)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, dim / d)
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle[:, : (d + 1) // 2]))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_spec(d: int, f: int) -> Dict:
+    return {"w_gate": P((d, f), ("d_model", "d_ff")),
+            "w_up": P((d, f), ("d_model", "d_ff")),
+            "w_down": P((f, d), ("d_ff", "d_model"))}
+
+
+def swiglu(params: Dict, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, params["w_down"])
+
+
+def gelu_mlp_spec(d: int, f: int) -> Dict:
+    return {"w_in": P((d, f), ("d_model", "d_ff")),
+            "b_in": P((f,), ("d_ff",), init="zeros"),
+            "w_out": P((f, d), ("d_ff", "d_model")),
+            "b_out": P((d,), ("d_model",), init="zeros")}
+
+
+def gelu_mlp(params: Dict, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, params["w_in"]) + params["b_in"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["w_out"]) + params["b_out"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_spec(vocab: int, d: int) -> Dict:
+    return {"embedding": P((vocab, d), ("vocab", "d_model"), init="embed")}
+
+
+def embed(params: Dict, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return params["embedding"].astype(dtype)[tokens]
+
+
+def unembed(params: Dict, x: jax.Array) -> jax.Array:
+    # logits in f32 for a stable softmax/xent
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      params["embedding"].astype(jnp.float32))
+
+
+def output_head_spec(d: int, vocab: int) -> Dict:
+    return {"w_out": P((d, vocab), ("d_model", "vocab"))}
+
+
+def output_head(params: Dict, x: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,dv->...v", x.astype(jnp.float32),
+                      params["w_out"].astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jax.Array, targets: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean cross-entropy over valid positions. logits: (..., V)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+__all__ = [
+    "rmsnorm_spec", "rmsnorm", "layernorm_spec", "layernorm", "apply_rope",
+    "rope_freqs", "sinusoidal_positions", "swiglu_spec", "swiglu",
+    "gelu_mlp_spec", "gelu_mlp", "embed_spec", "embed", "unembed",
+    "output_head_spec", "output_head", "softmax_xent",
+]

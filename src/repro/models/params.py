@@ -1,0 +1,90 @@
+"""Parameter specs: shapes + logical sharding axes + initializers.
+
+Models declare parameters as ``P(shape, axes)`` trees; ``init_params``
+materializes them and ``logical_axes`` yields a matching tree of logical-axis
+tuples that ``repro.sharding.rules`` maps onto the device mesh.  Scanned layer
+stacks simply prepend a ``"layers"`` axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Spec of one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]       # logical axis names, len == ndim
+    init: str = "normal"                  # normal | zeros | ones | embed
+    scale: float = 1.0                    # fan-in override multiplier
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, P)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    # convention: last axis is the output axis for weight matrices
+    return int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+
+
+def init_params(spec_tree: Any, key: jax.Array, dtype=jnp.float32) -> Any:
+    """Materialize a spec tree into parameter arrays."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def make(spec: P, k: jax.Array) -> jax.Array:
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        if spec.init == "embed":
+            return (jax.random.normal(k, spec.shape, dtype)
+                    * jnp.asarray(0.02 * spec.scale, dtype))
+        std = spec.scale / math.sqrt(max(_fan_in(spec.shape), 1))
+        return jax.random.normal(k, spec.shape, dtype) * jnp.asarray(std, dtype)
+
+    return treedef.unflatten([make(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(spec_tree: Any, dtype=jnp.bfloat16) -> Any:
+    """ShapeDtypeStructs for dry-run lowering — no allocation."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), spec_tree,
+        is_leaf=is_spec)
+
+
+def logical_axes(spec_tree: Any) -> Any:
+    """Tree of logical-axis tuples matching the param tree."""
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=is_spec)
+
+
+def stack_layer_specs(spec_tree: Any, n_layers: int) -> Any:
+    """Prepend a scanned 'layers' axis to every spec in the tree."""
+    return jax.tree.map(
+        lambda s: P((n_layers,) + s.shape, ("layers",) + s.axes,
+                    init=s.init, scale=s.scale),
+        spec_tree, is_leaf=is_spec)
+
+
+def count_params(tree: Any) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    if leaves and isinstance(leaves[0], P):
+        return sum(int(np.prod(l.shape)) for l in leaves)
+    return sum(int(np.prod(l.shape)) for l in leaves)
+
+
+__all__ = ["P", "is_spec", "init_params", "abstract_params", "logical_axes",
+           "stack_layer_specs", "count_params"]

@@ -1,0 +1,30 @@
+"""Model registry: ArchConfig -> model instance."""
+
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+
+from .hybrid import HymbaModel
+from .transformer import DecoderLM
+from .whisper import WhisperModel
+from .xlstm import XLSTMModel
+
+_FAMILY_TO_MODEL = {
+    "dense": DecoderLM,
+    "moe": DecoderLM,
+    "vlm": DecoderLM,
+    "audio": WhisperModel,
+    "hybrid": HymbaModel,
+    "ssm": XLSTMModel,
+}
+
+
+def build_model(cfg: ArchConfig):
+    try:
+        cls = _FAMILY_TO_MODEL[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r} for {cfg.name}") from None
+    return cls(cfg)
+
+
+__all__ = ["build_model"]

@@ -1,0 +1,308 @@
+"""State-space / recurrent sequence mixers: Mamba-style selective SSM and
+xLSTM's mLSTM / sLSTM cells.
+
+Training path uses *chunked* parallel forms (associative scan within a chunk,
+sequential carry across chunks) so activation memory is O(B * chunk * d *
+state) instead of O(B * S * d * state); decode is an O(1)-state update —
+which is exactly why the ssm/hybrid architectures run the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .params import P
+
+CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (used by hymba's mamba heads)
+# ---------------------------------------------------------------------------
+
+def mamba_spec(d: int, d_inner: int, state: int, conv_k: int = 4) -> Dict:
+    return {
+        "w_in": P((d, 2 * d_inner), ("d_model", "d_inner2")),
+        "conv_w": P((conv_k, d_inner), ("conv_k", "d_inner")),
+        "w_dt": P((d_inner, d_inner), ("d_inner", "d_inner"), scale=0.1),
+        "dt_bias": P((d_inner,), ("d_inner",), init="zeros"),
+        "w_bc": P((d_inner, 2 * state), ("d_inner", "state2")),
+        "a_log": P((d_inner, state), ("d_inner", "state"), init="zeros"),
+        "d_skip": P((d_inner,), ("d_inner",), init="ones"),
+        "w_out": P((d_inner, d), ("d_inner", "d_model")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over seq. x (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # (B, S+K-1, C)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else state
+    return out, new_state
+
+
+def _ssm_scan_chunked(da: jax.Array, dbx: jax.Array, h0: jax.Array,
+                      chunk: int = CHUNK) -> Tuple[jax.Array, jax.Array]:
+    """h_t = da_t * h_{t-1} + dbx_t (elementwise over (B,S,D,N) inputs).
+
+    Associative scan inside chunks, lax.scan carry across chunks.
+    Returns (h for every t, final h)."""
+    B, S, D, N = da.shape
+    chunk = min(chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                     constant_values=1.0)
+        dbx = jnp.pad(dbx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    da_c = da.reshape(B, n_chunks, chunk, D, N).transpose(1, 0, 2, 3, 4)
+    dbx_c = dbx.reshape(B, n_chunks, chunk, D, N).transpose(1, 0, 2, 3, 4)
+
+    def chunk_step(h, inp):
+        a, b = inp                                    # (B, chunk, D, N)
+        # prefix within chunk via associative scan
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h_all = (a_cum.astype(jnp.float32) * h[:, None]
+                 + b_cum.astype(jnp.float32))         # (B, chunk, D, N)
+        # emit per-step states in the input dtype (bf16 on the train path)
+        return h_all[:, -1], h_all.astype(a.dtype)
+
+    h_final, h_chunks = jax.lax.scan(chunk_step, h0, (da_c, dbx_c))
+    h_seq = h_chunks.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * chunk, D, N)
+    return h_seq[:, :S], h_final
+
+
+def mamba_apply(params: Dict, x: jax.Array,
+                state: Optional[Dict] = None,
+                ) -> Tuple[jax.Array, Dict]:
+    """x (B,S,d). state (decode): {'h': (B,D,N), 'conv': (B,K-1,D)}."""
+    B, S, d = x.shape
+    D = params["w_in"].shape[1] // 2
+    N = params["a_log"].shape[1]
+    xz = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xs, new_conv = _causal_conv(xs, params["conv_w"].astype(xs.dtype), conv_state)
+    xs = jax.nn.silu(xs)
+
+    dt = jax.nn.softplus(jnp.einsum("bsD,DE->bsE", xs, params["w_dt"])
+                         + params["dt_bias"]).astype(jnp.float32)   # (B,S,D)
+    bc = jnp.einsum("bsD,Dn->bsn", xs, params["w_bc"])
+    b_in, c_out = jnp.split(bc.astype(jnp.float32), 2, axis=-1)     # (B,S,N)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))               # (D,N) < 0
+    # (B,S,D,N) scan elements in bf16 (the state carry stays f32): these are
+    # the largest SSM activations and dominate train-time HBM otherwise
+    da = jnp.exp(dt[..., None] * a[None, None]).astype(jnp.bfloat16)
+    dbx = ((dt * xs.astype(jnp.float32))[..., None]
+           * b_in[:, :, None, :]).astype(jnp.bfloat16)
+
+    h0 = (jnp.zeros((B, D, N), jnp.float32) if state is None
+          else state["h"].astype(jnp.float32))
+    h_seq, h_last = _ssm_scan_chunked(da, dbx, h0)
+    y = jnp.einsum("bsDn,bsn->bsD", h_seq.astype(jnp.float32),
+                   c_out).astype(x.dtype)
+    y = y + xs * params["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsD,Dd->bsd", y, params["w_out"])
+    new_state = {"h": h_last.astype(jnp.float32), "conv": new_conv}
+    return out, new_state
+
+
+def mamba_state_specs(batch: int, d_inner: int, state: int, conv_k: int = 4,
+                      dtype=jnp.bfloat16) -> Dict:
+    return {"h": jax.ShapeDtypeStruct((batch, d_inner, state), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((batch, conv_k - 1, d_inner), dtype)}
+
+
+def mamba_init_state(batch: int, d_inner: int, state: int, conv_k: int = 4,
+                     dtype=jnp.bfloat16) -> Dict:
+    return {"h": jnp.zeros((batch, d_inner, state), jnp.float32),
+            "conv": jnp.zeros((batch, conv_k - 1, d_inner), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory, parallelizable) and sLSTM (scalar memory)
+# ---------------------------------------------------------------------------
+
+def mlstm_spec(d: int, n_heads: int, head_dim: int) -> Dict:
+    return {
+        "wq": P((d, n_heads, head_dim), ("d_model", "heads", "head_dim")),
+        "wk": P((d, n_heads, head_dim), ("d_model", "heads", "head_dim")),
+        "wv": P((d, n_heads, head_dim), ("d_model", "heads", "head_dim")),
+        "w_if": P((d, 2 * n_heads), ("d_model", "heads2"), scale=0.1),
+        "if_bias": P((2 * n_heads,), ("heads2",), init="zeros"),
+        "wo": P((n_heads, head_dim, d), ("heads", "head_dim", "d_model")),
+        "ogate": P((d, n_heads, head_dim), ("d_model", "heads", "head_dim"),
+                   scale=0.1),
+    }
+
+
+def mlstm_apply(params: Dict, x: jax.Array, state: Optional[Dict] = None,
+                chunk: int = CHUNK) -> Tuple[jax.Array, Dict]:
+    """Chunkwise-parallel mLSTM. x (B,S,d).
+
+    C_t = f_t C_{t-1} + i_t k_t v_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+    h_t = (q_t C_t) / max(|q_t n_t|, 1)
+    Gates are stabilized per chunk (log-space cumulative decays).
+    """
+    B, S, d = x.shape
+    H, Dh = params["wq"].shape[1], params["wq"].shape[2]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"]) * (Dh ** -0.5)
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"]) * (Dh ** -0.5)
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    gates = jnp.einsum("bsd,dg->bsg", x, params["w_if"]) + params["if_bias"]
+    i_pre, f_pre = jnp.split(gates.astype(jnp.float32), 2, axis=-1)  # (B,S,H)
+    log_f = -jax.nn.softplus(-f_pre)          # log sigmoid — forget in (0,1)
+    log_i = -jax.nn.softplus(-i_pre)          # stabilized input gate
+
+    chunk = min(chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for t in (q, k, v))
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-30.0)
+    Sp = n_chunks * chunk
+
+    def resh(t):
+        return t.reshape(B, n_chunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = resh(q), resh(k), resh(v)
+    lfc, lic = resh(log_f), resh(log_i)
+
+    def chunk_step(carry, inp):
+        C, n = carry                       # (B,H,Dh,Dh), (B,H,Dh)
+        qb, kb, vb, lf, li = inp           # (B,chunk,H,*)
+        lf_cum = jnp.cumsum(lf, axis=1)    # (B,chunk,H) log prod f_1..t
+        # decay applied to the incoming state for each position t
+        dec_in = jnp.exp(lf_cum)           # (B,chunk,H)
+        # intra-chunk weights: a_{t,s} = exp(lf_cum_t - lf_cum_s + li_s), s<=t
+        w_log = (lf_cum[:, :, None, :] - lf_cum[:, None, :, :]
+                 + li[:, None, :, :])      # (B,t,s,H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, :, :, None]
+        w = jnp.where(mask, jnp.exp(w_log), 0.0)
+        scores = jnp.einsum("bthk,bshk->btsh", qb, kb).astype(jnp.float32)
+        intra_num = jnp.einsum("btsh,bshv->bthv", scores * w,
+                               vb.astype(jnp.float32))
+        # q_t . n_t  (normalizer): intra part is sum_s w_ts (q_t . k_s)
+        intra_den = jnp.sum(scores * w, axis=2)                   # (B,t,H)
+        inter_num = jnp.einsum("bthk,bhkv->bthv", qb.astype(jnp.float32),
+                               C) * dec_in[..., None]
+        inter_den = jnp.einsum("bthk,bhk->bth", qb.astype(jnp.float32),
+                               n) * dec_in
+        num = intra_num + inter_num
+        den = jnp.abs(intra_den + inter_den)[..., None]
+        h = num / jnp.maximum(den, 1.0)
+        # state update to end of chunk
+        dec_k = jnp.exp(lf_cum[:, -1:, :] - lf_cum + li)       # (B,chunk,H)
+        C_new = C * jnp.exp(lf_cum[:, -1])[..., None, None] + jnp.einsum(
+            "bshk,bshv->bhkv", (kb.astype(jnp.float32)
+                                * dec_k[..., None]), vb.astype(jnp.float32))
+        n_new = n * jnp.exp(lf_cum[:, -1])[..., None] + jnp.einsum(
+            "bshk->bhk", kb.astype(jnp.float32) * dec_k[..., None])
+        return (C_new, n_new), h
+
+    C0 = (jnp.zeros((B, H, Dh, Dh), jnp.float32) if state is None
+          else state["C"])
+    n0 = (jnp.zeros((B, H, Dh), jnp.float32) if state is None
+          else state["n"])
+    (C_f, n_f), h_chunks = jax.lax.scan(chunk_step, (C0, n0),
+                                        (qc, kc, vc, lfc, lic))
+    h = h_chunks.swapaxes(0, 1).reshape(B, Sp, H, Dh)[:, :S]
+    o_gate = jax.nn.sigmoid(
+        jnp.einsum("bsd,dhk->bshk", x, params["ogate"]).astype(jnp.float32))
+    h = (h * o_gate).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", h, params["wo"])
+    return out, {"C": C_f, "n": n_f}
+
+
+def mlstm_state_specs(batch: int, n_heads: int, head_dim: int) -> Dict:
+    return {"C": jax.ShapeDtypeStruct((batch, n_heads, head_dim, head_dim),
+                                      jnp.float32),
+            "n": jax.ShapeDtypeStruct((batch, n_heads, head_dim), jnp.float32)}
+
+
+def mlstm_init_state(batch: int, n_heads: int, head_dim: int) -> Dict:
+    return {"C": jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+            "n": jnp.zeros((batch, n_heads, head_dim), jnp.float32)}
+
+
+def slstm_spec(d: int, n_heads: int) -> Dict:
+    dh = d // n_heads
+    return {
+        "w_gates": P((d, 4 * d), ("d_model", "gates")),
+        "r_gates": P((n_heads, dh, 4 * dh), ("heads", "head_dim", "gates_h"),
+                     scale=0.5),
+        "b_gates": P((4 * d,), ("gates",), init="zeros"),
+        "w_out": P((d, d), ("d_model", "d_model_out")),
+    }
+
+
+def slstm_apply(params: Dict, x: jax.Array, state: Optional[Dict] = None
+                ) -> Tuple[jax.Array, Dict]:
+    """Sequential sLSTM with exponential gating + per-head recurrence.
+
+    x (B,S,d).  State: c,n,m,h each (B,d) (m is the log-stabilizer).
+    """
+    B, S, d = x.shape
+    H = params["r_gates"].shape[0]
+    dh = d // H
+    zx = jnp.einsum("bsd,dg->bsg", x, params["w_gates"]) + params["b_gates"]
+    zx = zx.astype(jnp.float32)
+
+    def step(carry, z_t):
+        c, n, m, h = carry
+        hh = h.reshape(B, H, dh)
+        rec = jnp.einsum("bhk,hkg->bhg", hh,
+                         params["r_gates"].astype(jnp.float32))
+        z = z_t + rec.reshape(B, 4 * d)
+        zi, zf, zz, zo = jnp.split(z, 4, axis=-1)
+        log_f = -jax.nn.softplus(-zf)          # log sigmoid(f)
+        m_new = jnp.maximum(log_f + m, zi)     # stabilizer
+        i = jnp.exp(zi - m_new)
+        f = jnp.exp(log_f + m - m_new)
+        c_new = f * c + i * jnp.tanh(zz)
+        n_new = f * n + i
+        h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    if state is None:
+        zeros = jnp.zeros((B, d), jnp.float32)
+        carry0 = (zeros, zeros, zeros - 10.0, zeros)
+    else:
+        carry0 = (state["c"], state["n"], state["m"], state["h"])
+    carry, hs = jax.lax.scan(step, carry0, zx.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1).astype(x.dtype)                   # (B,S,d)
+    out = jnp.einsum("bsd,de->bse", hs, params["w_out"])
+    c, n, m, h = carry
+    return out, {"c": c, "n": n, "m": m, "h": h}
+
+
+def slstm_state_specs(batch: int, d: int) -> Dict:
+    z = jax.ShapeDtypeStruct((batch, d), jnp.float32)
+    return {"c": z, "n": z, "m": z, "h": z}
+
+
+def slstm_init_state(batch: int, d: int) -> Dict:
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "m": z - 10.0, "h": z}
+
+
+__all__ = ["mamba_spec", "mamba_apply", "mamba_state_specs", "mamba_init_state",
+           "mlstm_spec", "mlstm_apply", "mlstm_state_specs", "mlstm_init_state",
+           "slstm_spec", "slstm_apply", "slstm_state_specs", "slstm_init_state",
+           "CHUNK"]

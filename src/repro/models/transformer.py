@@ -1,0 +1,272 @@
+"""Decoder-only LM covering the dense, MoE and VLM architecture families.
+
+One scanned pre-norm block: x += attn(norm(x)); x += ffn|moe(norm(x)).
+Layers are stacked along a leading "layers" axis and executed with
+``jax.lax.scan`` (+ optional remat) so the HLO stays depth-independent —
+required to compile the 61-layer/1T-param configs in the dry-run.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+from . import attention as attn
+from . import moe as moe_mod
+from .layers import (embed, embed_spec, rmsnorm, rmsnorm_spec, softmax_xent,
+                     swiglu, swiglu_spec, unembed)
+from .params import (P, abstract_params, init_params, logical_axes,
+                     stack_layer_specs)
+
+DENSE_ATTN_MAX_SEQ = 2048   # above this, use chunked (memory-efficient) attn
+
+
+class DecoderLM:
+    """dense / moe / vlm decoder LM built from an ArchConfig."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.is_moe = cfg.n_experts > 0
+        self.is_vlm = cfg.n_patches > 0
+        self.dtype = jnp.dtype(cfg.dtype)
+        # optional sharding constrainers (set by launchers)
+        self.constrain_act = None
+        self.constrain_q = None
+        self.constrain_kv = None
+        self.constrain_moe = None
+
+    # -- specs ---------------------------------------------------------------
+    def block_spec(self) -> Dict:
+        c = self.cfg
+        spec = {
+            "ln1": rmsnorm_spec(c.d_model),
+            "attn": attn.gqa_spec(c.d_model, c.n_heads, c.n_kv_heads,
+                                  c.resolved_head_dim, qk_norm=c.qk_norm),
+            "ln2": rmsnorm_spec(c.d_model),
+        }
+        if self.is_moe:
+            spec["moe"] = moe_mod.moe_spec(c.d_model, c.d_ff, c.n_experts)
+        else:
+            spec["mlp"] = swiglu_spec(c.d_model, c.d_ff)
+        return spec
+
+    def param_specs(self) -> Dict:
+        c = self.cfg
+        spec = {
+            "embed": embed_spec(c.vocab, c.d_model),
+            "blocks": stack_layer_specs(self.block_spec(), c.n_layers),
+            "ln_f": rmsnorm_spec(c.d_model),
+        }
+        if self.is_vlm:
+            spec["mm_proj"] = {"w": P((c.d_model, c.d_model),
+                                      ("d_model", "d_model_out"))}
+        return spec
+
+    def init(self, key: jax.Array, dtype=None) -> Dict:
+        return init_params(self.param_specs(), key, dtype or self.dtype)
+
+    def abstract_params(self) -> Dict:
+        return abstract_params(self.param_specs(), self.dtype)
+
+    def param_logical_axes(self) -> Dict:
+        return logical_axes(self.param_specs())
+
+    # -- forward ---------------------------------------------------------------
+    def _block(self, layer_params: Dict, x: jax.Array, positions: jax.Array
+               ) -> Tuple[jax.Array, Dict]:
+        c = self.cfg
+        h = rmsnorm(layer_params["ln1"], x, c.norm_eps)
+        q, k, v = attn.project_qkv(layer_params["attn"], h)
+        q = attn.apply_rope(q, positions, c.rope_theta)
+        k = attn.apply_rope(k, positions, c.rope_theta)
+        k = attn.expand_kv(k, c.n_heads)     # TP-friendly GQA
+        v = attn.expand_kv(v, c.n_heads)
+        if self.constrain_q is not None:
+            q = self.constrain_q(q)
+            k = self.constrain_kv(k)
+            v = self.constrain_kv(v)
+        S = x.shape[1]
+        if S <= DENSE_ATTN_MAX_SEQ:
+            o = attn.dense_attention(q, k, v, positions[0], positions[0],
+                                     causal=True, window=c.window)
+        else:
+            o = attn.chunked_attention(q, k, v, positions[0], positions[0],
+                                       causal=True, window=c.window)
+        x = x + attn.project_out(layer_params["attn"], o)
+        h = rmsnorm(layer_params["ln2"], x, c.norm_eps)
+        aux = {}
+        if self.is_moe:
+            y, aux = moe_mod.moe_apply(layer_params["moe"], h,
+                                       top_k=c.top_k,
+                                       capacity_factor=c.capacity_factor,
+                                       constrain=self.constrain_moe)
+        else:
+            y = swiglu(layer_params["mlp"], h)
+        return x + y, aux
+
+    def _run_blocks(self, params: Dict, x: jax.Array, positions: jax.Array
+                    ) -> Tuple[jax.Array, Dict]:
+        c = self.cfg
+        cst = self.constrain_act or (lambda t: t)
+        x = cst(x)
+
+        def body(carry, layer_params):
+            h, aux_acc = carry
+            h, aux = self._block(layer_params, h, positions)
+            h = cst(h)
+            if aux:
+                aux_acc = jax.tree.map(lambda a, b: a + b, aux_acc,
+                                       {k: jnp.asarray(v, jnp.float32)
+                                        for k, v in aux.items()})
+            return (h, aux_acc), None
+
+        aux0 = ({"moe_aux_loss": jnp.zeros((), jnp.float32),
+                 "moe_z_loss": jnp.zeros((), jnp.float32),
+                 "moe_dropped_frac": jnp.zeros((), jnp.float32)}
+                if self.is_moe else {})
+        fn = body
+        if c.remat:
+            fn = jax.checkpoint(body,
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        if c.scan_layers:
+            (x, aux), _ = jax.lax.scan(fn, (x, aux0), params["blocks"])
+        else:
+            for i in range(c.n_layers):
+                layer = jax.tree.map(lambda p: p[i], params["blocks"])
+                (x, aux), _ = fn((x, aux0), layer)
+        if aux:
+            aux = {k: v / c.n_layers for k, v in aux.items()}
+        return x, aux
+
+    def forward(self, params: Dict, tokens: jax.Array,
+                extras: Optional[Dict] = None) -> Tuple[jax.Array, Dict]:
+        """Full-sequence logits (training / prefill)."""
+        c = self.cfg
+        B, S = tokens.shape
+        x = embed(params["embed"], tokens, self.dtype)
+        if self.is_vlm:
+            patches = extras["patch_embeds"].astype(self.dtype)
+            patches = jnp.einsum("bpd,de->bpe", patches,
+                                 params["mm_proj"]["w"])
+            x = jax.lax.dynamic_update_slice(x, patches, (0, 0, 0))
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x, aux = self._run_blocks(params, x, positions)
+        x = rmsnorm(params["ln_f"], x, c.norm_eps)
+        logits = unembed(params["embed"], x)
+        return logits, aux
+
+    # -- losses ---------------------------------------------------------------
+    def train_loss(self, params: Dict, batch: Dict
+                   ) -> Tuple[jax.Array, Dict]:
+        tokens = batch["tokens"]
+        logits, aux = self.forward(params, tokens, batch)
+        targets = tokens[:, 1:]
+        mask = batch.get("loss_mask")
+        mask = mask[:, 1:] if mask is not None else None
+        if self.is_vlm and mask is None:
+            # text-only loss: skip the patch positions
+            pos = jnp.arange(targets.shape[1])[None, :]
+            mask = (pos >= self.cfg.n_patches).astype(jnp.float32)
+        loss = softmax_xent(logits[:, :-1], targets, mask)
+        metrics = {"xent": loss}
+        if self.is_moe:
+            loss = loss + 0.01 * aux["moe_aux_loss"] + 1e-3 * aux["moe_z_loss"]
+            metrics.update(aux)
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # -- decode ----------------------------------------------------------------
+    def _cache_len(self, seq_len: int) -> int:
+        c = self.cfg
+        return min(c.window, seq_len) if c.window else seq_len
+
+    def init_cache(self, batch: int, seq_len: int) -> Dict:
+        c = self.cfg
+        T = self._cache_len(seq_len)
+        one = lambda: attn.init_kv_cache(batch, T, c.n_kv_heads,
+                                         c.resolved_head_dim, self.dtype)
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[one() for _ in range(c.n_layers)])
+        return stacked
+
+    def cache_specs(self, batch: int, seq_len: int) -> Dict:
+        c = self.cfg
+        T = self._cache_len(seq_len)
+        spec = attn.cache_specs(batch, T, c.n_kv_heads, c.resolved_head_dim,
+                                self.dtype)
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((c.n_layers,) + s.shape, s.dtype),
+            spec)
+
+    def decode_step(self, params: Dict, cache: Dict, tokens: jax.Array
+                    ) -> Tuple[jax.Array, Dict]:
+        """tokens (B,1) -> logits (B,1,V), updated stacked cache."""
+        c = self.cfg
+        x = embed(params["embed"], tokens, self.dtype)
+
+        def body(x, scanned):
+            layer_params, layer_cache = scanned
+            h = rmsnorm(layer_params["ln1"], x, c.norm_eps)
+            o, new_cache = attn.decode_attention(
+                layer_params["attn"], layer_cache, h, window=c.window,
+                rope_theta=c.rope_theta)
+            x = x + o
+            h = rmsnorm(layer_params["ln2"], x, c.norm_eps)
+            if self.is_moe:
+                y, _ = moe_mod.moe_apply(layer_params["moe"], h,
+                                         top_k=c.top_k,
+                                         capacity_factor=c.capacity_factor)
+            else:
+                y = swiglu(layer_params["mlp"], h)
+            return x + y, new_cache
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        x = rmsnorm(params["ln_f"], x, c.norm_eps)
+        logits = unembed(params["embed"], x)
+        return logits, new_cache
+
+    # -- shape plumbing ----------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict:
+        c = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                    "cache": self.cache_specs(B, S)}
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if self.is_vlm:
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, c.n_patches, c.d_model), self.dtype)
+        return specs
+
+    def make_batch(self, key: jax.Array, shape: ShapeConfig) -> Dict:
+        c = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            return {"tokens": jax.random.randint(key, (B, 1), 0, c.vocab),
+                    "cache": self.init_cache(B, S)}
+        batch = {"tokens": jax.random.randint(key, (B, S), 0, c.vocab)}
+        if self.is_vlm:
+            # frontend-stub embeddings at token-embedding scale
+            batch["patch_embeds"] = 0.02 * jax.random.normal(
+                key, (B, c.n_patches, c.d_model), self.dtype)
+        return batch
+
+    def input_logical_axes(self, shape: ShapeConfig) -> Dict:
+        kv_cache_axes = {"k": ("layers", "batch", "kv_seq", "kv_heads",
+                               "head_dim"),
+                         "v": ("layers", "batch", "kv_seq", "kv_heads",
+                               "head_dim"),
+                         "pos": ("layers",)}
+        if shape.kind == "decode":
+            return {"tokens": ("batch", None), "cache": kv_cache_axes}
+        axes = {"tokens": ("batch", "seq")}
+        if self.is_vlm:
+            axes["patch_embeds"] = ("batch", "patches", "d_model")
+        return axes
+
+
+__all__ = ["DecoderLM", "DENSE_ATTN_MAX_SEQ"]

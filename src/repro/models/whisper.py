@@ -1,0 +1,240 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a stub).
+
+Per the brief, ``input_specs()`` supplies precomputed frame embeddings
+(B, frames, d_model) — the conv frontend's output — so the model here is the
+transformer backbone: sinusoidal-position encoder, causal decoder with
+cross-attention, LayerNorm + GELU MLPs, learned decoder positions sized by
+the requested shape (real Whisper caps at 448; the 32k decode shapes are a
+config exercise, noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+from . import attention as attn
+from .layers import (embed, embed_spec, gelu_mlp, gelu_mlp_spec, layernorm,
+                     layernorm_spec, sinusoidal_positions, softmax_xent,
+                     unembed)
+from .params import P, abstract_params, init_params, logical_axes, stack_layer_specs
+from .transformer import DENSE_ATTN_MAX_SEQ
+
+
+class WhisperModel:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.n_enc = cfg.enc_layers or cfg.n_layers
+        self.n_dec = cfg.n_layers
+        self.constrain_act = None
+        self.constrain_q = None
+        self.constrain_kv = None
+
+    # -- specs -----------------------------------------------------------
+    def _enc_block_spec(self) -> Dict:
+        c = self.cfg
+        return {"ln1": layernorm_spec(c.d_model),
+                "attn": attn.gqa_spec(c.d_model, c.n_heads, c.n_kv_heads,
+                                      c.resolved_head_dim, bias=True),
+                "ln2": layernorm_spec(c.d_model),
+                "mlp": gelu_mlp_spec(c.d_model, c.d_ff)}
+
+    def _dec_block_spec(self) -> Dict:
+        c = self.cfg
+        return {"ln1": layernorm_spec(c.d_model),
+                "self_attn": attn.gqa_spec(c.d_model, c.n_heads, c.n_kv_heads,
+                                           c.resolved_head_dim, bias=True),
+                "ln_x": layernorm_spec(c.d_model),
+                "cross_attn": attn.gqa_spec(c.d_model, c.n_heads, c.n_kv_heads,
+                                            c.resolved_head_dim, bias=True),
+                "ln2": layernorm_spec(c.d_model),
+                "mlp": gelu_mlp_spec(c.d_model, c.d_ff)}
+
+    def param_specs(self) -> Dict:
+        c = self.cfg
+        return {
+            "embed": embed_spec(c.vocab, c.d_model),
+            "enc_blocks": stack_layer_specs(self._enc_block_spec(), self.n_enc),
+            "enc_ln": layernorm_spec(c.d_model),
+            "dec_blocks": stack_layer_specs(self._dec_block_spec(), self.n_dec),
+            "dec_ln": layernorm_spec(c.d_model),
+        }
+
+    def init(self, key, dtype=None) -> Dict:
+        return init_params(self.param_specs(), key, dtype or self.dtype)
+
+    def abstract_params(self) -> Dict:
+        return abstract_params(self.param_specs(), self.dtype)
+
+    def param_logical_axes(self) -> Dict:
+        return logical_axes(self.param_specs())
+
+    # -- encoder -----------------------------------------------------------
+    def encode(self, params: Dict, frames: jax.Array) -> jax.Array:
+        c = self.cfg
+        B, F, _ = frames.shape
+        x = frames.astype(self.dtype)
+        x = x + sinusoidal_positions(F, c.d_model).astype(self.dtype)[None]
+        pos = jnp.arange(F, dtype=jnp.int32)
+
+        def body(h, layer):
+            y = layernorm(layer["ln1"], h, c.norm_eps)
+            q, k, v = attn.project_qkv(layer["attn"], y)
+            o = attn.dense_attention(q, k, v, pos, pos, causal=False)
+            h = h + attn.project_out(layer["attn"], o)
+            y = layernorm(layer["ln2"], h, c.norm_eps)
+            return h + gelu_mlp(layer["mlp"], y), None
+
+        fn = jax.checkpoint(body) if c.remat else body
+        x, _ = jax.lax.scan(fn, x, params["enc_blocks"])
+        return layernorm(params["enc_ln"], x, c.norm_eps)
+
+    # -- decoder (full sequence: train / prefill) ---------------------------
+    def forward(self, params: Dict, tokens: jax.Array, extras: Dict
+                ) -> Tuple[jax.Array, Dict]:
+        c = self.cfg
+        B, S = tokens.shape
+        enc_out = self.encode(params, extras["frames"])
+        x = embed(params["embed"], tokens, self.dtype)
+        x = x + sinusoidal_positions(S, c.d_model).astype(self.dtype)[None]
+        pos = jnp.arange(S, dtype=jnp.int32)
+        enc_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+
+        cst = self.constrain_act or (lambda t: t)
+        x = cst(x)
+
+        def body(h, layer):
+            y = layernorm(layer["ln1"], h, c.norm_eps)
+            q, k, v = attn.project_qkv(layer["self_attn"], y)
+            if S <= DENSE_ATTN_MAX_SEQ:
+                o = attn.dense_attention(q, k, v, pos, pos, causal=True)
+            else:
+                o = attn.chunked_attention(q, k, v, pos, pos, causal=True)
+            h = h + attn.project_out(layer["self_attn"], o)
+            y = layernorm(layer["ln_x"], h, c.norm_eps)
+            q, k, v = attn.project_qkv(layer["cross_attn"], y, enc_out)
+            o = attn.dense_attention(q, k, v, pos, enc_pos, causal=False)
+            h = h + attn.project_out(layer["cross_attn"], o)
+            y = layernorm(layer["ln2"], h, c.norm_eps)
+            return cst(h + gelu_mlp(layer["mlp"], y)), None
+
+        fn = jax.checkpoint(body) if c.remat else body
+        x, _ = jax.lax.scan(fn, x, params["dec_blocks"])
+        x = layernorm(params["dec_ln"], x, c.norm_eps)
+        return unembed(params["embed"], x), {}
+
+    def train_loss(self, params: Dict, batch: Dict) -> Tuple[jax.Array, Dict]:
+        tokens = batch["tokens"]
+        logits, _ = self.forward(params, tokens, batch)
+        loss = softmax_xent(logits[:, :-1], tokens[:, 1:])
+        return loss, {"loss": loss, "xent": loss}
+
+    # -- decode --------------------------------------------------------------
+    def init_cache(self, batch: int, seq_len: int) -> Dict:
+        c = self.cfg
+        self_c = attn.init_kv_cache(batch, seq_len, c.n_kv_heads,
+                                    c.resolved_head_dim, self.dtype)
+        self_stack = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                  *[self_c for _ in range(self.n_dec)])
+        F = c.enc_frames
+        cross = {"k": jnp.zeros((self.n_dec, batch, F, c.n_kv_heads,
+                                 c.resolved_head_dim), self.dtype),
+                 "v": jnp.zeros((self.n_dec, batch, F, c.n_kv_heads,
+                                 c.resolved_head_dim), self.dtype)}
+        return {"self": self_stack, "cross": cross}
+
+    def cache_specs(self, batch: int, seq_len: int) -> Dict:
+        c = self.cfg
+        spec = attn.cache_specs(batch, seq_len, c.n_kv_heads,
+                                c.resolved_head_dim, self.dtype)
+        self_stack = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((self.n_dec,) + s.shape, s.dtype),
+            spec)
+        F = c.enc_frames
+        cross = {"k": jax.ShapeDtypeStruct(
+                     (self.n_dec, batch, F, c.n_kv_heads,
+                      c.resolved_head_dim), self.dtype),
+                 "v": jax.ShapeDtypeStruct(
+                     (self.n_dec, batch, F, c.n_kv_heads,
+                      c.resolved_head_dim), self.dtype)}
+        return {"self": self_stack, "cross": cross}
+
+    def decode_step(self, params: Dict, cache: Dict, tokens: jax.Array
+                    ) -> Tuple[jax.Array, Dict]:
+        c = self.cfg
+        B = tokens.shape[0]
+        pos = cache["self"]["pos"][0]
+        x = embed(params["embed"], tokens, self.dtype)
+        # sinusoidal position of the current step
+        d = c.d_model
+        dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+        angle = pos.astype(jnp.float32) / jnp.power(10_000.0, dim / d)
+        pe = jnp.zeros((d,), jnp.float32)
+        pe = pe.at[0::2].set(jnp.sin(angle))
+        pe = pe.at[1::2].set(jnp.cos(angle[: (d + 1) // 2]))
+        x = x + pe.astype(self.dtype)[None, None, :]
+        F = cache["cross"]["k"].shape[2]
+        enc_pos = jnp.arange(F, dtype=jnp.int32)
+
+        def body(x, scanned):
+            layer, self_cache, cross_k, cross_v = scanned
+            y = layernorm(layer["ln1"], x, c.norm_eps)
+            o, new_self = attn.decode_attention(layer["self_attn"], self_cache,
+                                                y, use_rope=False)
+            x = x + o
+            y = layernorm(layer["ln_x"], x, c.norm_eps)
+            q, _, _ = attn.project_qkv(layer["cross_attn"], y)
+            qpos = jnp.zeros((1,), jnp.int32)
+            o = attn.dense_attention(q, cross_k, cross_v, qpos, enc_pos,
+                                     causal=False)
+            x = x + attn.project_out(layer["cross_attn"], o)
+            y = layernorm(layer["ln2"], x, c.norm_eps)
+            return x + gelu_mlp(layer["mlp"], y), new_self
+
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec_blocks"], cache["self"],
+                      cache["cross"]["k"], cache["cross"]["v"]))
+        x = layernorm(params["dec_ln"], x, c.norm_eps)
+        logits = unembed(params["embed"], x)
+        return logits, {"self": new_self, "cross": cache["cross"]}
+
+    # -- shapes ----------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict:
+        c = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                    "cache": self.cache_specs(B, S)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "frames": jax.ShapeDtypeStruct((B, c.enc_frames, c.d_model),
+                                               self.dtype)}
+
+    def make_batch(self, key: jax.Array, shape: ShapeConfig) -> Dict:
+        c = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            return {"tokens": jax.random.randint(key, (B, 1), 0, c.vocab),
+                    "cache": self.init_cache(B, S)}
+        return {"tokens": jax.random.randint(key, (B, S), 0, c.vocab),
+                "frames": 0.02 * jax.random.normal(
+                    key, (B, c.enc_frames, c.d_model), self.dtype)}
+
+    def input_logical_axes(self, shape: ShapeConfig) -> Dict:
+        if shape.kind == "decode":
+            kv = {"k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                  "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                  "pos": ("layers",)}
+            cross = {"k": ("layers", "batch", "frames", "kv_heads", "head_dim"),
+                     "v": ("layers", "batch", "frames", "kv_heads", "head_dim")}
+            return {"tokens": ("batch", None),
+                    "cache": {"self": kv, "cross": cross}}
+        return {"tokens": ("batch", "seq"),
+                "frames": ("batch", "frames", "d_model")}
+
+
+__all__ = ["WhisperModel"]

@@ -1,0 +1,149 @@
+"""xLSTM stack: alternating mLSTM (matrix-memory) and sLSTM (scalar-memory)
+blocks, per arXiv:2405.04517.  The 24-layer config is scanned as 12
+(mLSTM, sLSTM) pairs; d_ff=0 — the cells carry their own projections.
+O(1) decode state => runs the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+from . import ssm as ssm_mod
+from .layers import embed, embed_spec, rmsnorm, rmsnorm_spec, softmax_xent, unembed
+from .params import abstract_params, init_params, logical_axes, stack_layer_specs
+
+
+class XLSTMModel:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.n_pairs = cfg.n_layers // 2
+        self.head_dim = cfg.resolved_head_dim
+        self.constrain_act = None
+        self.constrain_q = None
+        self.constrain_kv = None
+
+    def pair_spec(self) -> Dict:
+        c = self.cfg
+        return {
+            "ln_m": rmsnorm_spec(c.d_model),
+            "mlstm": ssm_mod.mlstm_spec(c.d_model, c.n_heads, self.head_dim),
+            "ln_s": rmsnorm_spec(c.d_model),
+            "slstm": ssm_mod.slstm_spec(c.d_model, c.n_heads),
+        }
+
+    def param_specs(self) -> Dict:
+        c = self.cfg
+        return {"embed": embed_spec(c.vocab, c.d_model),
+                "pairs": stack_layer_specs(self.pair_spec(), self.n_pairs),
+                "ln_f": rmsnorm_spec(c.d_model)}
+
+    def init(self, key, dtype=None) -> Dict:
+        return init_params(self.param_specs(), key, dtype or self.dtype)
+
+    def abstract_params(self) -> Dict:
+        return abstract_params(self.param_specs(), self.dtype)
+
+    def param_logical_axes(self) -> Dict:
+        return logical_axes(self.param_specs())
+
+    # -- forward -----------------------------------------------------------
+    def forward(self, params: Dict, tokens: jax.Array,
+                extras: Optional[Dict] = None) -> Tuple[jax.Array, Dict]:
+        c = self.cfg
+        x = embed(params["embed"], tokens, self.dtype)
+
+        def body(h, pair):
+            y = rmsnorm(pair["ln_m"], h, c.norm_eps)
+            mo, _ = ssm_mod.mlstm_apply(pair["mlstm"], y)
+            h = h + mo
+            y = rmsnorm(pair["ln_s"], h, c.norm_eps)
+            so, _ = ssm_mod.slstm_apply(pair["slstm"], y)
+            return cst(h + so), None
+
+        cst = self.constrain_act or (lambda t: t)
+        x = cst(x)
+        fn = jax.checkpoint(body) if c.remat else body
+        x, _ = jax.lax.scan(fn, x, params["pairs"])
+        x = rmsnorm(params["ln_f"], x, c.norm_eps)
+        return unembed(params["embed"], x), {}
+
+    def train_loss(self, params: Dict, batch: Dict) -> Tuple[jax.Array, Dict]:
+        tokens = batch["tokens"]
+        logits, _ = self.forward(params, tokens, batch)
+        mask = batch.get("loss_mask")
+        loss = softmax_xent(logits[:, :-1], tokens[:, 1:],
+                            mask[:, 1:] if mask is not None else None)
+        return loss, {"loss": loss, "xent": loss}
+
+    # -- decode ------------------------------------------------------------
+    def init_cache(self, batch: int, seq_len: int) -> Dict:
+        c = self.cfg
+        m = ssm_mod.mlstm_init_state(batch, c.n_heads, self.head_dim)
+        s = ssm_mod.slstm_init_state(batch, c.d_model)
+        stack = lambda t: jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (self.n_pairs,) + x.shape), t)
+        return {"mlstm": stack(m), "slstm": stack(s)}
+
+    def cache_specs(self, batch: int, seq_len: int) -> Dict:
+        c = self.cfg
+        m = ssm_mod.mlstm_state_specs(batch, c.n_heads, self.head_dim)
+        s = ssm_mod.slstm_state_specs(batch, c.d_model)
+        stack = lambda t: jax.tree.map(
+            lambda sp: jax.ShapeDtypeStruct((self.n_pairs,) + sp.shape,
+                                            sp.dtype), t)
+        return {"mlstm": stack(m), "slstm": stack(s)}
+
+    def decode_step(self, params: Dict, cache: Dict, tokens: jax.Array
+                    ) -> Tuple[jax.Array, Dict]:
+        c = self.cfg
+        x = embed(params["embed"], tokens, self.dtype)
+
+        def body(x, scanned):
+            pair, m_state, s_state = scanned
+            y = rmsnorm(pair["ln_m"], x, c.norm_eps)
+            mo, new_m = ssm_mod.mlstm_apply(pair["mlstm"], y, m_state)
+            x = x + mo
+            y = rmsnorm(pair["ln_s"], x, c.norm_eps)
+            so, new_s = ssm_mod.slstm_apply(pair["slstm"], y, s_state)
+            return x + so, (new_m, new_s)
+
+        x, (new_m, new_s) = jax.lax.scan(
+            body, x, (params["pairs"], cache["mlstm"], cache["slstm"]))
+        x = rmsnorm(params["ln_f"], x, c.norm_eps)
+        logits = unembed(params["embed"], x)
+        return logits, {"mlstm": new_m, "slstm": new_s}
+
+    # -- shapes --------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict:
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                    "cache": self.cache_specs(B, S)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+    def make_batch(self, key: jax.Array, shape: ShapeConfig) -> Dict:
+        c = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            return {"tokens": jax.random.randint(key, (B, 1), 0, c.vocab),
+                    "cache": self.init_cache(B, S)}
+        return {"tokens": jax.random.randint(key, (B, S), 0, c.vocab)}
+
+    def input_logical_axes(self, shape: ShapeConfig) -> Dict:
+        if shape.kind == "decode":
+            m = {"C": ("layers", "batch", "heads", "head_dim", "head_dim_out"),
+                 "n": ("layers", "batch", "heads", "head_dim")}
+            s = {k: ("layers", "batch", "d_model")
+                 for k in ("c", "n", "m", "h")}
+            return {"tokens": ("batch", None),
+                    "cache": {"mlstm": m, "slstm": s}}
+        return {"tokens": ("batch", "seq")}
+
+
+__all__ = ["XLSTMModel"]

@@ -1,0 +1,5 @@
+from .rules import (rules_for_profile, shard_batch_spec, spec_for,
+                    tree_shardings)
+
+__all__ = ["rules_for_profile", "shard_batch_spec", "spec_for",
+           "tree_shardings"]

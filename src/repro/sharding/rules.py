@@ -1,0 +1,253 @@
+"""Logical-axis sharding rules -> NamedSharding, divisibility-aware.
+
+Every parameter/input tensor carries logical axis names (see models/params.P
+and the models' ``input_logical_axes``).  This engine maps logical axes to
+mesh axes with:
+  * a global priority order (e.g. shard kv_heads before falling back to
+    sharding the KV sequence of a cache);
+  * divisibility checks (25 heads on a 16-way axis -> replicate, logged);
+  * profile-dependent rules: "tp" shards weights over the model axis only;
+    "fsdp_tp" additionally shards the d_model dim over the data axis
+    (ZeRO-3/FSDP-style) — required for the 314B/1T configs.
+"""
+
+from __future__ import annotations
+
+import logging
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+log = logging.getLogger(__name__)
+
+Candidate = Tuple[str, ...]
+
+# candidates per logical axis, in preference order
+BASE_RULES: Dict[str, List[Candidate]] = {
+    # data-parallel axes
+    "batch": [("pod", "data"), ("data",)],
+    # tensor-parallel axes
+    "experts": [("model",)],
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    "d_ff": [("model",)],
+    "vocab": [("model",)],
+    "d_inner": [("model",)],
+    "d_inner2": [("model",)],
+    "heads2": [("model",)],
+    "gates": [("model",)],
+    "gates_h": [("model",)],
+    # sequence/context parallelism (activations, KV caches, long-context)
+    "seq": [("data",)],
+    "kv_seq": [("model",)],
+    "frames": [],
+    # last-resort: shard head_dim over model (e.g. KV caches whose kv_heads
+    # don't divide the model axis, xlstm matrix states)
+    "head_dim": [("model",)],
+    # replicated by default
+    "d_model": [],
+    "d_model_out": [],
+    "head_dim_out": [],
+    "state": [],
+    "state2": [],
+    "conv_k": [],
+    "layers": [],
+    "patches": [],
+}
+
+FSDP_EXTRA: Dict[str, List[Candidate]] = {
+    # prefer sharding over pod x data (multi-pod FSDP: without the pod axis
+    # the parameter shards replicate per pod); single-pod meshes filter the
+    # absent "pod" axis out and use data only.
+    "d_model": [("pod", "data"), ("data",)],
+    "d_model_out": [("pod", "data"), ("data",)],
+}
+
+# assignment priority: earlier names grab mesh axes first
+PRIORITY = [
+    "experts", "heads", "kv_heads", "d_ff", "vocab", "d_inner", "d_inner2",
+    "heads2", "gates", "gates_h", "batch", "seq", "kv_seq", "d_model",
+    "d_model_out", "head_dim", "state", "frames",
+]
+
+
+def rules_for_profile(profile: str) -> Dict[str, List[Candidate]]:
+    rules = {k: list(v) for k, v in BASE_RULES.items()}
+    if profile == "fsdp_tp":
+        for k, v in FSDP_EXTRA.items():
+            rules[k] = list(v) + rules.get(k, [])
+    return rules
+
+
+def spec_for(axes: Sequence[Optional[str]], shape: Sequence[int], mesh: Mesh,
+             rules: Dict[str, List[Candidate]]) -> PartitionSpec:
+    """Build a PartitionSpec for one tensor."""
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    assignment: Dict[int, Candidate] = {}
+    used: set = set()
+
+    def axis_priority(name: Optional[str]) -> int:
+        if name is None or name not in PRIORITY:
+            return len(PRIORITY)
+        return PRIORITY.index(name)
+
+    dims = sorted(range(len(axes)), key=lambda i: (axis_priority(axes[i]), i))
+    for i in dims:
+        name = axes[i]
+        if name is None:
+            continue
+        for cand in rules.get(name, []):
+            cand = tuple(a for a in cand if a in mesh_sizes)
+            if not cand or any(a in used for a in cand):
+                continue
+            size = int(np.prod([mesh_sizes[a] for a in cand]))
+            if shape[i] % size == 0 and shape[i] >= size:
+                assignment[i] = cand
+                used.update(cand)
+                break
+        else:
+            if rules.get(name):
+                log.debug("replicating axis %r of shape %s (no divisible rule)",
+                          name, tuple(shape))
+    parts = []
+    for i in range(len(axes)):
+        a = assignment.get(i)
+        parts.append(a if a is None or len(a) > 1 else a[0])
+    return PartitionSpec(*parts)
+
+
+def tree_shardings(spec_tree, axes_tree, mesh: Mesh, profile: str = "tp",
+                   extra_rules: Optional[Dict[str, List[Candidate]]] = None):
+    """NamedSharding tree for a (ShapeDtypeStruct|array) tree + axes tree.
+
+    Axes leaves are tuples of logical names, which jax.tree would treat as
+    containers — so flatten the value tree first and match axes up to it.
+    """
+    rules = rules_for_profile(profile)
+    if extra_rules:
+        for k, v in extra_rules.items():
+            rules[k] = list(v) + rules.get(k, [])
+    leaves, treedef = jax.tree.flatten(spec_tree)
+    axes_leaves = treedef.flatten_up_to(axes_tree)
+    out = [NamedSharding(mesh, spec_for(a, x.shape, mesh, rules))
+           for x, a in zip(leaves, axes_leaves)]
+    return treedef.unflatten(out)
+
+
+def make_act_constrainer(mesh: Mesh, batch_axes=("pod", "data"),
+                         seq_axis: str = "model"):
+    """Sequence-parallel residual-stream constrainer (Megatron-SP style).
+
+    Returns f(x) that constrains a (B, S, D) activation to
+    P(batch_axes, seq_axis, None) when divisible.  Applied at scan-layer
+    boundaries it (a) shards the per-layer saved activations of the scan VJP
+    by the model-axis size and (b) turns the attention/FFN entry/exit into
+    all-gather / reduce-scatter pairs — XLA SPMD derives the standard SP
+    communication pattern from the constraint.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    bnames = tuple(a for a in batch_axes if a in sizes and sizes[a] > 1)
+    bsize = int(np.prod([sizes[a] for a in bnames])) if bnames else 1
+    ssize = sizes.get(seq_axis, 1)
+
+    def constrain(x):
+        if x.ndim != 3:
+            return x
+        parts = [None, None, None]
+        if bsize > 1 and x.shape[0] % bsize == 0:
+            parts[0] = bnames if len(bnames) > 1 else bnames[0]
+        if ssize > 1 and x.shape[1] % ssize == 0:
+            parts[1] = seq_axis
+        if parts[0] is None and parts[1] is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, PartitionSpec(*parts)))
+
+    return constrain
+
+
+def make_attn_constrainers(mesh: Mesh, batch_axes=("pod", "data"),
+                           tp_axis: str = "model"):
+    """(constrain_q, constrain_kv) for attention operand layouts.
+
+    q (B,S,H,D): shard heads over the model axis when divisible, else fall
+    back to sharding the query sequence (keeps attention FLOPs/memory sharded
+    for head counts like 56 or 25 that don't divide 16 — without this XLA
+    silently *replicates* the whole attention computation per device).
+    k/v (B,T,H,D) (already G-expanded): heads when divisible, else
+    replicated (full KV is needed by every q shard under causal masking).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    bnames = tuple(a for a in batch_axes if a in sizes and sizes[a] > 1)
+    bsize = int(np.prod([sizes[a] for a in bnames])) if bnames else 1
+    tsize = sizes.get(tp_axis, 1)
+    bpart = bnames if len(bnames) > 1 else (bnames[0] if bnames else None)
+
+    def _shard(x, head_ok: bool, seq_ok: bool):
+        if x.ndim != 4 or tsize <= 1:
+            return x
+        parts = [None, None, None, None]
+        if bsize > 1 and x.shape[0] % bsize == 0:
+            parts[0] = bpart
+        if head_ok and x.shape[2] % tsize == 0:
+            parts[2] = tp_axis
+        elif seq_ok and x.shape[1] % tsize == 0:
+            parts[1] = tp_axis
+        if all(p is None for p in parts):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, PartitionSpec(*parts)))
+
+    def constrain_q(x):
+        return _shard(x, head_ok=True, seq_ok=True)
+
+    def constrain_kv(x):
+        return _shard(x, head_ok=True, seq_ok=False)
+
+    return constrain_q, constrain_kv
+
+
+def make_moe_constrainer(mesh: Mesh, batch_axes=("pod", "data"),
+                         tp_axis: str = "model"):
+    """Constrainer for (E, C, X) MoE dispatch/expert buffers: experts over
+    the model axis when divisible, else capacity over the data axes, else
+    the feature dim over the model axis."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    bnames = tuple(a for a in batch_axes if a in sizes and sizes[a] > 1)
+    bsize = int(np.prod([sizes[a] for a in bnames])) if bnames else 1
+    tsize = sizes.get(tp_axis, 1)
+    bpart = bnames if len(bnames) > 1 else (bnames[0] if bnames else None)
+
+    def constrain(x):
+        # (B, E, C, X) grouped dispatch/expert buffers: groups over the data
+        # axes, experts over the model axis when divisible (else the feature
+        # dim), capacity replicated.
+        if x.ndim != 4 or tsize <= 1:
+            return x
+        B, E, C, X = x.shape
+        parts = [None, None, None, None]
+        if bsize > 1 and B % bsize == 0:
+            parts[0] = bpart
+        if E % tsize == 0:
+            parts[1] = tp_axis
+        elif X % tsize == 0:
+            parts[3] = tp_axis
+        if all(p is None for p in parts):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, PartitionSpec(*parts)))
+
+    return constrain
+
+
+def shard_batch_spec(mesh: Mesh, ndim: int) -> NamedSharding:
+    """Default data-parallel sharding for a (B, ...) host batch array."""
+    names = [a for a in ("pod", "data") if a in mesh.axis_names]
+    parts = [tuple(names) if len(names) > 1 else names[0]] + [None] * (ndim - 1)
+    return NamedSharding(mesh, PartitionSpec(*parts))
+
+
+__all__ = ["BASE_RULES", "FSDP_EXTRA", "PRIORITY", "rules_for_profile",
+           "spec_for", "tree_shardings", "shard_batch_spec"]

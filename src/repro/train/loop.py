@@ -1,0 +1,87 @@
+"""End-to-end training loop: loader -> device feed -> jitted step ->
+checkpoint, with mid-epoch fault-tolerant restart.
+
+This is the driver the examples use (single host, real payloads).  On a
+cluster the same loop runs per host with ``LoaderConfig.shard_id`` /
+``num_shards`` set from the process index (each host fetches exactly its
+shard of the global batch, as the paper partitions per GPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core import CassandraLoader, KVStore, LoaderConfig
+from repro.data.pipeline import DeviceFeed
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import OptimizerConfig
+from repro.train.step import init_state, make_train_step
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    seq_len: int = 128
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    seed: int = 0
+
+
+def run_training(model, store: KVStore, uuids, loader_cfg: LoaderConfig,
+                 loop_cfg: TrainLoopConfig,
+                 opt_cfg: Optional[OptimizerConfig] = None,
+                 state: Optional[Dict] = None,
+                 on_metrics: Optional[Callable] = None) -> Dict:
+    """Train `model` from the network loader. Returns final state + history."""
+    opt_cfg = opt_cfg or OptimizerConfig(total_steps=loop_cfg.total_steps)
+    step_fn = jax.jit(make_train_step(model, opt_cfg), donate_argnums=(0,))
+
+    ckpt = (CheckpointManager(loop_cfg.checkpoint_dir)
+            if loop_cfg.checkpoint_dir else None)
+    start_step = 0
+    loader_pos = {"epoch": 0, "cursor": 0}
+    if state is None:
+        if ckpt and ckpt.latest_step() is not None:
+            template = init_state(model, opt_cfg, jax.random.PRNGKey(loop_cfg.seed))
+            state, manifest = ckpt.restore(template)
+            start_step = manifest["step"]
+            loader_pos = manifest["extra"].get("loader", loader_pos)
+        else:
+            state = init_state(model, opt_cfg, jax.random.PRNGKey(loop_cfg.seed))
+
+    loader = CassandraLoader(store, uuids, loader_cfg)
+    loader.start(epoch=loader_pos["epoch"], cursor=loader_pos["cursor"])
+    feed = DeviceFeed(loader, loop_cfg.seq_len)
+
+    history = []
+    t0 = time.time()
+    for step in range(start_step, loop_cfg.total_steps):
+        dev_batch, _meta = next(feed)
+        batch = {"tokens": dev_batch["tokens"],
+                 "loss_mask": dev_batch["loss_mask"]}
+        state, metrics = step_fn(state, batch)
+        if (step + 1) % loop_cfg.log_every == 0 or step == start_step:
+            loss = float(metrics["loss"])
+            rec = {"step": step + 1, "loss": loss,
+                   "sps": (step + 1 - start_step) * loader_cfg.batch_size
+                   / max(time.time() - t0, 1e-9)}
+            history.append(rec)
+            if on_metrics:
+                on_metrics(rec)
+        if ckpt and (step + 1) % loop_cfg.checkpoint_every == 0:
+            ckpt.save(step + 1, state,
+                      extra={"loader": loader.state()}, blocking=False)
+    if ckpt:
+        ckpt.save(loop_cfg.total_steps, state,
+                  extra={"loader": loader.state()}, blocking=True)
+    loader.close()
+    return {"state": state, "history": history}
+
+
+__all__ = ["TrainLoopConfig", "run_training"]

@@ -1,0 +1,218 @@
+"""AdamW with fp32 or blockwise-int8 optimizer state, global-norm clipping,
+and a warmup+cosine schedule.  Pure-JAX (no optax dependency).
+
+int8 state is a distributed-memory trick (8-bit Adam): m and v are stored as
+int8 with a per-row fp32 scale, dequantized on use, requantized after the
+update.  For kimi-k2 (1.03T params) this is the difference between fitting
+512 x 16 GB chips and not: bf16 params (2.06 TB) + int8 m+v (2.06 TB)
+~= 8 GB/chip, vs ~24 GB/chip with fp32 m/v + master weights.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # float32       : fp32 m and v (classic AdamW)
+    # int8          : blockwise-int8 m and v (8-bit Adam)
+    # int8_factored : int8 m + Adafactor-style factored v (row/col moments)
+    #                 — the only variant that fits the 1T config on ONE pod
+    state_dtype: str = "float32"
+
+
+def lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.peak_lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+# ---------------------------------------------------------------------------
+# int8 blockwise quantization (per-row scale over the last axis)
+# ---------------------------------------------------------------------------
+
+def _quantize(x: jax.Array) -> Dict[str, jax.Array]:
+    if x.ndim == 0:
+        x = x[None]
+        scale = jnp.maximum(jnp.abs(x), 1e-12) / 127.0
+        return {"q": jnp.round(x / scale).astype(jnp.int8)[0],
+                "scale": scale[0]}
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _dequantize(qs: Dict[str, jax.Array]) -> jax.Array:
+    return qs["q"].astype(jnp.float32) * qs["scale"]
+
+
+def _is_qleaf(x) -> bool:
+    return isinstance(x, dict) and set(x.keys()) == {"q", "scale"}
+
+
+# ---------------------------------------------------------------------------
+# Init / update
+# ---------------------------------------------------------------------------
+
+def _factorable(shape) -> bool:
+    return len(shape) >= 2
+
+
+def _vfactor_init(shape) -> Dict[str, jax.Array]:
+    return {"vr": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+            "vc": jnp.zeros(shape[:-2] + (1, shape[-1]), jnp.float32)}
+
+
+def _is_vfactor(x) -> bool:
+    return isinstance(x, dict) and set(x.keys()) == {"vr", "vc"}
+
+
+def adamw_init(params: Any, cfg: OptimizerConfig) -> Dict:
+    quant_m = cfg.state_dtype in ("int8", "int8_factored")
+
+    def make_m(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return _quantize(z) if quant_m else z
+
+    def make_v(p):
+        if cfg.state_dtype == "int8":
+            return _quantize(jnp.zeros(p.shape, jnp.float32))
+        if cfg.state_dtype == "int8_factored" and _factorable(p.shape):
+            return _vfactor_init(p.shape)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return {"m": jax.tree.map(make_m, params),
+            "v": jax.tree.map(make_v, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_opt_state(abstract_params: Any, cfg: OptimizerConfig) -> Dict:
+    def q_spec(p):
+        scale_shape = p.shape[:-1] + (1,) if p.shape else ()
+        return {"q": jax.ShapeDtypeStruct(p.shape, jnp.int8),
+                "scale": jax.ShapeDtypeStruct(scale_shape, jnp.float32)}
+
+    def one_m(p):
+        if cfg.state_dtype in ("int8", "int8_factored"):
+            return q_spec(p)
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+
+    def one_v(p):
+        if cfg.state_dtype == "int8":
+            return q_spec(p)
+        if cfg.state_dtype == "int8_factored" and _factorable(p.shape):
+            return {"vr": jax.ShapeDtypeStruct(p.shape[:-1] + (1,), jnp.float32),
+                    "vc": jax.ShapeDtypeStruct(p.shape[:-2] + (1, p.shape[-1]),
+                                               jnp.float32)}
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+
+    return {"m": jax.tree.map(one_m, abstract_params),
+            "v": jax.tree.map(one_v, abstract_params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def opt_state_logical_axes(param_axes: Any, cfg: OptimizerConfig) -> Dict:
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+
+    def one_m(axes):
+        if cfg.state_dtype in ("int8", "int8_factored"):
+            scale_axes = tuple(axes[:-1]) + (None,) if axes else ()
+            return {"q": tuple(axes), "scale": scale_axes}
+        return tuple(axes)
+
+    def one_v(axes):
+        if cfg.state_dtype == "int8":
+            return one_m(axes)
+        if cfg.state_dtype == "int8_factored" and len(axes) >= 2:
+            return {"vr": tuple(axes[:-1]) + (None,),
+                    "vc": tuple(axes[:-2]) + (None, axes[-1])}
+        return tuple(axes)
+
+    return {"m": jax.tree.map(one_m, param_axes, is_leaf=is_axes),
+            "v": jax.tree.map(one_v, param_axes, is_leaf=is_axes),
+            "step": ()}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(grads: Any, opt_state: Dict, params: Any,
+                 cfg: OptimizerConfig) -> Tuple[Any, Dict, Dict]:
+    """Returns (new_params, new_opt_state, stats)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    quant_m = cfg.state_dtype in ("int8", "int8_factored")
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_f = _dequantize(m) if quant_m else m
+        m_new = b1 * m_f + (1 - b1) * g
+        m_hat = m_new / bc1
+        if _is_vfactor(v):
+            g2 = g * g + 1e-30
+            vr = b2 * v["vr"] + (1 - b2) * g2.mean(axis=-1, keepdims=True)
+            vc = b2 * v["vc"] + (1 - b2) * g2.mean(axis=-2, keepdims=True)
+            v_hat = (vr * vc / jnp.maximum(
+                vr.mean(axis=-2, keepdims=True), 1e-30)) / bc2
+            v_new = {"vr": vr, "vc": vc}
+        else:
+            v_f = _dequantize(v) if cfg.state_dtype == "int8" else v
+            v_full = b2 * v_f + (1 - b2) * g * g
+            v_hat = v_full / bc2
+            v_new = _quantize(v_full) if cfg.state_dtype == "int8" else v_full
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, (_quantize(m_new) if quant_m else m_new), v_new
+
+    def upd_leaf(p, g, m, v):
+        # Chunk giant (layer-stacked) leaves over their leading axis so the
+        # f32 dequant/update temporaries are per-layer, not per-stack — for
+        # kimi's (61,384,7168,2048) expert weights that is the difference
+        # between ~5 GB and ~0.1 GB of optimizer temp per buffer.
+        if p.ndim >= 3 and p.size > (1 << 27):
+            return jax.lax.map(lambda t: upd(*t), (p, g, m, v))
+        return upd(p, g, m, v)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd_leaf(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, stats
+
+
+__all__ = ["OptimizerConfig", "lr_at", "adamw_init", "adamw_update",
+           "abstract_opt_state", "opt_state_logical_axes", "global_norm"]

@@ -1,0 +1,116 @@
+"""Attention equivalences: chunked(custom-VJP) == dense; decode cache paths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as attn
+from repro.models.params import init_params
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 19), (False, 0)])
+@pytest.mark.parametrize("S,qc,kc", [(128, 32, 32), (96, 64, 32)])
+def test_chunked_matches_dense_forward(causal, window, S, qc, kc):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, H, K, D = 2, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, K, D))
+    v = jax.random.normal(ks[2], (B, S, K, D))
+    pos = jnp.arange(S)
+    want = attn.dense_attention(q, k, v, pos, pos, causal=causal,
+                                window=window)
+    got = attn.chunked_attention(q, k, v, causal=causal, window=window,
+                                 q_chunk=qc, kv_chunk=kc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 23)])
+def test_chunked_matches_dense_gradients(causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, S, H, K, D = 2, 96, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, K, D))
+    v = jax.random.normal(ks[2], (B, S, K, D))
+    pos = jnp.arange(S)
+
+    def loss_c(q, k, v):
+        o = attn.chunked_attention(q, k, v, causal=causal, window=window,
+                                   q_chunk=32, kv_chunk=32)
+        return jnp.sum(o * o)
+
+    def loss_d(q, k, v):
+        o = attn.dense_attention(q, k, v, pos, pos, causal=causal,
+                                 window=window)
+        return jnp.sum(o * o)
+
+    gc = jax.grad(loss_c, argnums=(0, 1, 2))(q, k, v)
+    gd = jax.grad(loss_d, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gc, gd):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-4)
+
+
+def test_decode_attention_matches_full_forward():
+    """Prefill-by-decode: step-by-step cache attention == full causal attn."""
+    c = {"d": 32, "H": 4, "K": 2, "Dh": 8}
+    spec = attn.gqa_spec(c["d"], c["H"], c["K"], c["Dh"])
+    params = init_params(spec, jax.random.PRNGKey(0), jnp.float32)
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, c["d"])) * 0.3
+
+    # full-sequence path (with rope)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = attn.project_qkv(params, x)
+    q = attn.apply_rope(q, pos, 10_000.0)
+    k = attn.apply_rope(k, pos, 10_000.0)
+    o = attn.dense_attention(q, k, v, pos[0], pos[0], causal=True)
+    want = attn.project_out(params, o)
+
+    # decode path token by token
+    cache = attn.init_kv_cache(B, S, c["K"], c["Dh"], jnp.float32)
+    outs = []
+    for t in range(S):
+        o_t, cache = attn.decode_attention(params, cache, x[:, t:t + 1])
+        outs.append(o_t)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_ring_buffer_matches_sliding_window():
+    """SWA ring cache == full attention with window mask."""
+    c = {"d": 32, "H": 4, "K": 2, "Dh": 8}
+    W = 5
+    spec = attn.gqa_spec(c["d"], c["H"], c["K"], c["Dh"])
+    params = init_params(spec, jax.random.PRNGKey(2), jnp.float32)
+    B, S = 1, 14
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, S, c["d"])) * 0.3
+
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = attn.project_qkv(params, x)
+    q = attn.apply_rope(q, pos, 10_000.0)
+    k = attn.apply_rope(k, pos, 10_000.0)
+    o = attn.dense_attention(q, k, v, pos[0], pos[0], causal=True, window=W)
+    want = attn.project_out(params, o)
+
+    cache = attn.init_kv_cache(B, W, c["K"], c["Dh"], jnp.float32)
+    outs = []
+    for t in range(S):
+        o_t, cache = attn.decode_attention(params, cache, x[:, t:t + 1],
+                                           window=W)
+        outs.append(o_t)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_qk_norm_applied():
+    spec = attn.gqa_spec(16, 2, 2, 8, qk_norm=True)
+    params = init_params(spec, jax.random.PRNGKey(4), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 4, 16))
+    q, k, _ = attn.project_qkv(params, x)
+    # per-head rmsnorm => unit rms rows
+    rms = np.sqrt(np.mean(np.asarray(q) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, np.ones_like(rms), rtol=1e-3)

@@ -1,0 +1,81 @@
+"""Multi-node cluster loading: token-aware routing, replication, hedging."""
+
+import numpy as np
+import pytest
+
+from repro.core import (CassandraLoader, Cluster, KVStore, LoaderConfig,
+                        VirtualClock, tight_loop)
+from repro.core.connection import ConnectionPool
+from repro.core.netsim import TIERS
+from repro.data.datasets import SyntheticImageDataset, ingest
+
+
+@pytest.fixture(scope="module")
+def store_uuids():
+    store = KVStore()
+    uuids = ingest(store, SyntheticImageDataset(n_samples=20_000, seed=9))
+    return store, uuids
+
+
+def test_multinode_loader_delivers(store_uuids):
+    store, uuids = store_uuids
+    cfg = LoaderConfig(batch_size=128, prefetch_buffers=4, io_threads=6,
+                       route="med", n_nodes=3, replication_factor=2, seed=3)
+    ld = CassandraLoader(store, uuids, cfg)
+    res = tight_loop(ld, n_batches=30)
+    assert res["throughput_Bps"] > 0.5e9
+    # traffic actually spread across the 3 nodes
+    per_node = [n.egress.bytes_total for n in ld.cluster.nodes.values()]
+    assert all(b > 0 for b in per_node)
+    assert max(per_node) < 0.8 * sum(per_node)
+
+
+def test_token_aware_routing_hits_replicas(store_uuids):
+    store, uuids = store_uuids
+    clock = VirtualClock()
+    cluster = Cluster(clock, store, backend="scylla", n_nodes=3, rf=2, seed=1)
+    pool = ConnectionPool(clock, cluster, TIERS["low"], io_threads=3, seed=2)
+    done = []
+    for u in uuids[:300]:
+        replicas = set(cluster.ring.replicas(u, 2))
+        conn = pool._pick_connection(u)
+        assert conn._node.name in replicas        # token-aware: replica only
+        pool.fetch(u, done.append)
+    clock.drain()
+    assert len(done) == 300
+
+
+def test_hedged_requests_first_wins(store_uuids):
+    store, uuids = store_uuids
+    clock = VirtualClock()
+    cluster = Cluster(clock, store, backend="scylla", n_nodes=3, rf=2, seed=1)
+    pool = ConnectionPool(clock, cluster, TIERS["high"], io_threads=3,
+                          seed=2, hedge_after=0.05)
+    results = []
+    for u in uuids[:200]:
+        pool.fetch(u, results.append)
+    clock.drain()
+    # every key answered exactly once despite duplicate backup requests
+    assert len(results) == 200
+    assert len({str(r.uuid) for r in results}) == 200
+    assert pool.requests_sent > 200               # hedges actually fired
+    # (whether a hedge *wins* depends on a straggling original — covered
+    # statistically by test_hedging_reduces_tail_latency below)
+
+
+def test_hedging_reduces_tail_latency(store_uuids):
+    store, uuids = store_uuids
+
+    def run(hedge):
+        clock = VirtualClock()
+        cluster = Cluster(clock, store, backend="cassandra", n_nodes=3, rf=2,
+                          seed=4)
+        pool = ConnectionPool(clock, cluster, TIERS["high"], io_threads=3,
+                              seed=5, hedge_after=0.4 if hedge else None)
+        lat = []
+        for u in uuids[:400]:
+            pool.fetch(u, lambda r: lat.append(r.t_done - r.t_issued))
+        clock.drain()
+        return np.percentile(lat, 99)
+
+    assert run(True) <= run(False) * 1.05   # tail no worse, usually better

@@ -1,0 +1,56 @@
+"""Gradient compression: int8 + error feedback properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.train.compression import (compress_leaf, dequantize_int8,
+                                     init_error_feedback, quantize_int8)
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 64)) * 3.0
+    q, scale = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, scale).reshape(x.shape) - x)
+    assert float((err <= scale * 0.5 + 1e-9).all())
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_error_feedback_accumulates_lost_mass(seed):
+    """Sum of (compressed + next-step error) equals the true gradient."""
+    g = jnp.asarray(np.random.default_rng(seed).normal(size=(8, 32)),
+                    jnp.float32)
+    err = jnp.zeros_like(g)
+    comp, new_err = compress_leaf(g, err)
+    np.testing.assert_allclose(np.asarray(comp + new_err), np.asarray(g),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_error_feedback_contracts_over_steps():
+    """Repeated EF compression of a constant gradient: the *cumulative*
+    applied update converges to the true cumulative gradient."""
+    g = jax.random.normal(jax.random.PRNGKey(1), (4, 128)) * 0.37
+    err = jnp.zeros_like(g)
+    applied = jnp.zeros_like(g)
+    for step in range(20):
+        comp, err = compress_leaf(g, err)
+        applied = applied + comp
+    target = g * 20
+    rel = float(jnp.abs(applied - target).max() / jnp.abs(target).max())
+    assert rel < 0.02
+
+
+def test_wire_bytes_are_quarter_of_f32():
+    x = jax.random.normal(jax.random.PRNGKey(2), (1024,))
+    q, scale = quantize_int8(x)
+    wire = q.nbytes + scale.nbytes
+    assert wire < x.nbytes / 3        # ~4x compression (+ scale overhead)
+
+
+def test_init_error_feedback_structure():
+    params = {"a": jnp.zeros((3, 4)), "b": {"c": jnp.zeros(5)}}
+    ef = init_error_feedback(params)
+    assert jax.tree.structure(ef) == jax.tree.structure(params)
+    assert all(float(jnp.abs(l).max()) == 0 for l in jax.tree.leaves(ef))

@@ -1,0 +1,78 @@
+"""Data pipeline: token codec, DeviceFeed, per-host sharding."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CassandraLoader, KVStore, LoaderConfig
+from repro.data.datasets import (SyntheticTokenDataset, decode_token_record,
+                                 encode_token_record, ingest)
+from repro.data.pipeline import DeviceFeed, batch_to_numpy
+
+
+@given(n=st.integers(1, 300), label=st.integers(-2**31, 2**31 - 1),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_token_record_roundtrip(n, label, seed):
+    toks = np.random.default_rng(seed).integers(0, 2**31 - 1, size=n,
+                                                dtype=np.int32)
+    blob = encode_token_record(toks, label)
+    toks2, label2 = decode_token_record(blob)
+    assert label2 == label
+    np.testing.assert_array_equal(toks, toks2)
+
+
+def test_token_record_rejects_garbage():
+    with pytest.raises(ValueError):
+        decode_token_record(b"NOPE" + b"\x00" * 16)
+
+
+@pytest.fixture(scope="module")
+def token_store():
+    store = KVStore()
+    uuids = ingest(store, SyntheticTokenDataset(n_samples=512, seq_len=24,
+                                                vocab=1000, seed=3))
+    return store, uuids
+
+
+def test_batch_to_numpy_shapes(token_store):
+    store, uuids = token_store
+    ld = CassandraLoader(store, uuids, LoaderConfig(
+        batch_size=8, prefetch_buffers=2, io_threads=2, route="low",
+        materialize=True, seed=4)).start()
+    batch = ld.next_batch()
+    arrs = batch_to_numpy(batch, seq_len=24)
+    assert arrs["tokens"].shape == (8, 24)
+    assert arrs["loss_mask"].shape == (8, 24)
+    assert (arrs["loss_mask"] == 1.0).all()      # full-length sequences
+    assert arrs["tokens"].dtype == np.int32
+
+
+def test_device_feed_yields_device_arrays(token_store):
+    store, uuids = token_store
+    ld = CassandraLoader(store, uuids, LoaderConfig(
+        batch_size=4, prefetch_buffers=2, io_threads=2, route="low",
+        materialize=True, seed=5))
+    feed = DeviceFeed(ld, seq_len=24)
+    dev_batch, meta = next(feed)
+    assert isinstance(dev_batch["tokens"], jax.Array)
+    assert dev_batch["tokens"].shape == (4, 24)
+    # payload contents survive the trip
+    from repro.data.datasets import decode_token_record
+    toks0, _ = decode_token_record(meta.samples[0].payload)
+    np.testing.assert_array_equal(np.asarray(dev_batch["tokens"][0]),
+                                  toks0[:24])
+
+
+def test_per_host_sharding_is_partition(token_store):
+    store, uuids = token_store
+    seen = []
+    for shard in range(4):
+        ld = CassandraLoader(store, uuids, LoaderConfig(
+            batch_size=4, prefetch_buffers=2, io_threads=2, route="low",
+            materialize=True, seed=6, shard_id=shard, num_shards=4))
+        seen.extend(str(u) for u in ld.plan._uuids)
+    assert len(seen) == len(uuids)
+    assert set(seen) == {str(u) for u in uuids}

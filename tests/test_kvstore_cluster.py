@@ -1,0 +1,85 @@
+"""KV store, token ring, and token-aware routing tests."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Cluster, KVStore, DataRow, MetaRow, TokenRing,
+                        VirtualClock, make_uuid)
+from repro.core.kvstore import token_of
+
+
+def _rows(n=100, seed=0):
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        u = make_uuid(rng)
+        yield (DataRow(u, i % 7, 1000 + i, payload=b"x" * 16),
+               MetaRow(u, f"e{i % 11}", i % 7))
+
+
+def test_atomic_insert_and_get():
+    store = KVStore()
+    rows = list(_rows(10))
+    store.insert_many(rows)
+    assert len(store) == 10
+    data, meta = rows[3]
+    assert store.get_data(data.uuid).label == data.label
+    assert store.get_meta(data.uuid).entity_id == meta.entity_id
+
+
+def test_atomic_insert_rejects_mismatched_uuid():
+    store = KVStore()
+    rng = np.random.default_rng(0)
+    d = DataRow(make_uuid(rng), 0, 10)
+    m = MetaRow(make_uuid(rng), "e", 0)
+    with pytest.raises(ValueError):
+        store.insert_atomic(d, m)
+
+
+def test_missing_uuid_raises():
+    store = KVStore()
+    with pytest.raises(KeyError):
+        store.get_data(make_uuid(np.random.default_rng(0)))
+
+
+def test_token_ring_balance():
+    ring = TokenRing([f"n{i}" for i in range(4)], vnodes=128)
+    rng = np.random.default_rng(0)
+    counts = {f"n{i}": 0 for i in range(4)}
+    for _ in range(4000):
+        u = make_uuid(rng)
+        counts[ring.replicas(u, 1)[0]] += 1
+    # with 128 vnodes the split should be within ~25% of fair share
+    for c in counts.values():
+        assert 700 < c < 1300
+
+
+def test_token_ring_replication_distinct():
+    ring = TokenRing(["a", "b", "c"], vnodes=32)
+    rng = np.random.default_rng(1)
+    for _ in range(200):
+        reps = ring.replicas(make_uuid(rng), 2)
+        assert len(reps) == 2 and len(set(reps)) == 2
+
+
+def test_token_ring_deterministic():
+    ring1 = TokenRing(["a", "b"], seed=5)
+    ring2 = TokenRing(["a", "b"], seed=5)
+    u = make_uuid(np.random.default_rng(2))
+    assert ring1.replicas(u, 2) == ring2.replicas(u, 2)
+
+
+def test_cluster_routes_to_replicas():
+    store = KVStore()
+    store.insert_many(_rows(50))
+    clk = VirtualClock()
+    cluster = Cluster(clk, store, backend="scylla", n_nodes=3, rf=2)
+    for u in store.uuids()[:20]:
+        nodes = cluster.replica_nodes(u)
+        assert len(nodes) == 2
+        names = cluster.ring.replicas(u, 2)
+        assert [n.name for n in nodes] == names
+
+
+def test_token_of_stable():
+    u = make_uuid(np.random.default_rng(9))
+    assert token_of(u) == token_of(u)

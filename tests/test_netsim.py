@@ -1,0 +1,100 @@
+"""Unit tests for the network/storage simulator."""
+
+import numpy as np
+import pytest
+
+from repro.core.netsim import (AIMDBandwidth, FifoResource, RateResource,
+                               RouteProfile, SCYLLA, CASSANDRA, SimServerNode,
+                               TIERS, VirtualClock)
+
+
+def test_virtual_clock_orders_events():
+    clk = VirtualClock()
+    seen = []
+    clk.schedule(2.0, seen.append, "b")
+    clk.schedule(1.0, seen.append, "a")
+    clk.schedule(3.0, seen.append, "c")
+    clk.drain()
+    assert seen == ["a", "b", "c"]
+    assert clk.now() == pytest.approx(3.0)
+
+
+def test_virtual_clock_run_until():
+    clk = VirtualClock()
+    box = []
+    clk.schedule(5.0, box.append, 1)
+    assert clk.run_until(lambda: len(box) == 1, timeout=10.0)
+    assert clk.now() == pytest.approx(5.0)
+
+
+def test_fifo_resource_serializes():
+    f = FifoResource("x")
+    assert f.acquire(0.0, 1.0) == pytest.approx(1.0)
+    assert f.acquire(0.5, 1.0) == pytest.approx(2.0)   # queues behind job 1
+    assert f.acquire(10.0, 1.0) == pytest.approx(11.0)  # idle gap respected
+
+
+def test_rate_resource_tracks_bytes():
+    r = RateResource("pipe", 100.0)
+    t = r.acquire(0.0, 200)
+    assert t == pytest.approx(2.0)
+    assert r.bytes_total == 200
+
+
+def test_aimd_decreases_on_loss_and_recovers():
+    route = RouteProfile("t", rtt=0.1, conn_capacity=1e8, loss_per_byte=1e-6,
+                         loss_spread=1.0)
+    bw = AIMDBandwidth(np.random.default_rng(0), route)
+    r0 = bw.rate
+    # force events: huge transfer => Poisson mean >> 1
+    bw.transfer_seconds(10_000_000, now=0.0)
+    assert bw.rate < r0
+    # loss-free route ramps toward capacity
+    route2 = RouteProfile("t2", rtt=0.1, conn_capacity=1e8, loss_per_byte=0.0)
+    bw2 = AIMDBandwidth(np.random.default_rng(0), route2)
+    assert bw2.rate == pytest.approx(bw2.capacity)
+
+
+def test_aimd_burst_state_transitions():
+    route = RouteProfile("t", rtt=0.1, conn_capacity=1e8, loss_per_byte=1e-9,
+                         burst_factor=100.0, burst_on_mean=1.0, burst_off_mean=1.0)
+    bw = AIMDBandwidth(np.random.default_rng(3), route)
+    states = set()
+    for k in range(200):
+        bw._advance_state(k * 0.5)
+        states.add(bw._congested)
+    assert states == {True, False}
+
+
+def test_cassandra_model_reads_more_disk_than_scylla():
+    rng = np.random.default_rng(0)
+    sc = SimServerNode("s", SCYLLA, rng)
+    ca = SimServerNode("c", np.random.default_rng(0) and CASSANDRA,
+                       np.random.default_rng(1))
+    sc.serve(0.0, 1_000_000)
+    ca.serve(0.0, 1_000_000)
+    assert ca.disk_bytes == pytest.approx(2.25e6, rel=0.01)
+    assert sc.disk_bytes == 1_000_000
+
+
+def test_tier_table_is_monotone_in_latency():
+    assert TIERS["low"].rtt < TIERS["med"].rtt < TIERS["high"].rtt
+
+
+def test_deterministic_replay():
+    """Same seed => byte-identical event trace (required for benchmarks)."""
+
+    def run():
+        clk = VirtualClock()
+        rng = np.random.default_rng(42)
+        node = SimServerNode("n", SCYLLA, np.random.default_rng(7))
+        from repro.core.netsim import RateResource, SimConnection
+        ingress = RateResource("i", 1e9)
+        conn = SimConnection(0, clk, node, TIERS["high"], rng, ingress)
+        done = []
+        for _ in range(50):
+            conn.request(115_000, done.append)
+        clk.drain()
+        return done
+
+    assert run() == run()

@@ -1,0 +1,148 @@
+"""Prefetcher behaviour: ordering, coverage, ramp, checkpointing."""
+
+import numpy as np
+import pytest
+
+from repro.core import (CassandraLoader, KVStore, LoaderConfig, EpochPlan)
+from repro.data.datasets import SyntheticImageDataset, ingest
+
+
+@pytest.fixture(scope="module")
+def small_store():
+    store = KVStore()
+    uuids = ingest(store, SyntheticImageDataset(n_samples=4096, seed=3))
+    return store, uuids
+
+
+def _loader(store, uuids, **kw):
+    defaults = dict(batch_size=64, prefetch_buffers=4, io_threads=4,
+                    route="low", backend="scylla", seed=7)
+    defaults.update(kw)
+    return CassandraLoader(store, uuids, LoaderConfig(**defaults))
+
+
+def test_epoch_plan_is_uniform_permutation():
+    rng = np.random.default_rng(0)
+    from repro.core.kvstore import make_uuid
+    uuids = [make_uuid(rng) for _ in range(100)]
+    plan = EpochPlan(uuids, seed=1)
+    p0, p1 = plan.permutation(0), plan.permutation(1)
+    assert sorted(map(str, p0)) == sorted(map(str, uuids))
+    assert p0 != p1                    # reshuffled across epochs
+    assert plan.permutation(0) == p0   # deterministic
+
+
+def test_epoch_plan_sharding_partitions():
+    rng = np.random.default_rng(0)
+    from repro.core.kvstore import make_uuid
+    uuids = [make_uuid(rng) for _ in range(100)]
+    shards = [EpochPlan(uuids, seed=1, shard_id=i, num_shards=4) for i in range(4)]
+    all_ids = [u for s in shards for u in s._uuids]
+    assert sorted(map(str, all_ids)) == sorted(map(str, uuids))
+
+
+def test_in_order_delivers_plan_order(small_store):
+    store, uuids = small_store
+    ld = _loader(store, uuids, out_of_order=False, batch_size=32)
+    ld.start()
+    plan = ld.plan.permutation(0)
+    got = []
+    for _ in range(4):
+        got.extend(ld.next_batch().uuids)
+    assert got == plan[:len(got)]
+
+
+def test_ooo_covers_issued_prefix(small_store):
+    """OOO delivers exactly the issued samples, just reordered by arrival."""
+    store, uuids = small_store
+    ld = _loader(store, uuids, out_of_order=True, batch_size=32, route="high")
+    ld.start()
+    got = []
+    for _ in range(8):
+        got.extend(str(u) for u in ld.next_batch().uuids)
+    plan = [str(u) for u in ld.plan.permutation(0)]
+    # everything delivered was issued from the plan prefix (no dupes, no inventions)
+    assert len(set(got)) == len(got)
+    prefix = set(plan[:len(got) + ld.cfg.prefetch_buffers * 32 + 64])
+    assert set(got) <= prefix
+
+
+def test_ooo_batches_are_full_size(small_store):
+    store, uuids = small_store
+    ld = _loader(store, uuids, out_of_order=True, batch_size=48)
+    ld.start()
+    for _ in range(5):
+        assert len(ld.next_batch().samples) == 48
+
+
+def test_incremental_ramp_limits_initial_burst(small_store):
+    store, uuids = small_store
+    ld_eager = _loader(store, uuids, incremental_ramp=False, prefetch_buffers=8)
+    ld_ramp = _loader(store, uuids, incremental_ramp=True, prefetch_buffers=8)
+    ld_eager.start()
+    ld_ramp.start()
+    # before any consumption: eager has k batches in flight, ramped has 1
+    assert ld_eager.pool.requests_sent == 8 * 64
+    assert ld_ramp.pool.requests_sent == 1 * 64
+
+
+def test_ramp_reaches_full_depth(small_store):
+    store, uuids = small_store
+    ld = _loader(store, uuids, incremental_ramp=True, prefetch_buffers=4)
+    ld.start()
+    for _ in range(20):
+        ld.next_batch()
+    # after ramp_every*k consumes the target depth must be k
+    assert ld.prefetcher._target_depth() == 4
+
+
+def test_labels_travel_with_features(small_store):
+    store, uuids = small_store
+    ld = _loader(store, uuids)
+    ld.start()
+    batch = ld.next_batch()
+    for s in batch.samples:
+        assert s.label == store.get_data(s.uuid).label
+
+
+def test_checkpoint_state_roundtrip(small_store):
+    store, uuids = small_store
+    ld = _loader(store, uuids, batch_size=32)
+    ld.start()
+    for _ in range(10):
+        ld.next_batch()
+    st = ld.state()
+    assert st["consumed"] == 10
+    assert st["epoch"] == 0 and st["cursor"] == 320
+    # restart from the recorded position: first delivered batch continues the plan
+    ld2 = _loader(store, uuids, batch_size=32, out_of_order=False)
+    ld2.start(epoch=st["epoch"], cursor=st["cursor"])
+    nxt = ld2.next_batch().uuids
+    assert nxt == ld2.plan.permutation(0)[320:352]
+
+
+def test_epoch_rollover(small_store):
+    store, uuids = small_store
+    few = uuids[:128]
+    ld = _loader(store, few, batch_size=32, out_of_order=False)
+    ld.start()
+    for _ in range(4):
+        ld.next_batch()
+    b = ld.next_batch()           # first batch of epoch 1
+    assert b.epoch == 1
+    assert ld.state()["epoch"] == 1
+
+
+def test_throughput_ooo_beats_inorder_at_high_latency():
+    # paper-scale config (Fig. 4/5): 32 connections, 16 buffers, B=512
+    store = KVStore()
+    uuids = ingest(store, SyntheticImageDataset(n_samples=100000, seed=5))
+    from repro.core import tight_loop
+    res = {}
+    for ooo in (True, False):
+        cfg = LoaderConfig(batch_size=512, prefetch_buffers=16, io_threads=16,
+                           out_of_order=ooo, route="high", backend="scylla", seed=2)
+        res[ooo] = tight_loop(CassandraLoader(store, uuids, cfg), n_batches=150)
+    assert res[True]["throughput_Bps"] > 1.3 * res[False]["throughput_Bps"]
+    # and OOO batch times are far more stable (paper Fig. 4)
+    assert res[True]["batch_times"].max() < res[False]["batch_times"].max()

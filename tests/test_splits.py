@@ -1,0 +1,69 @@
+"""Automatic split creation — hypothesis property tests."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (KVStore, MetaRow, SplitSpec, check_entity_independence,
+                        create_splits, make_uuid)
+
+
+def _meta_rows(n_samples, n_entities, n_classes, seed):
+    rng = np.random.default_rng(seed)
+    rows = []
+    for _ in range(n_samples):
+        rows.append(MetaRow(make_uuid(rng), f"e{int(rng.integers(n_entities))}",
+                            int(rng.integers(n_classes))))
+    return rows
+
+
+@given(n_samples=st.integers(200, 800),
+       n_entities=st.integers(20, 120),
+       n_classes=st.integers(2, 10),
+       seed=st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_entity_independence_always_holds(n_samples, n_entities, n_classes, seed):
+    rows = _meta_rows(n_samples, n_entities, n_classes, seed)
+    splits = create_splits(rows, SplitSpec(fractions=(0.8, 0.1, 0.1), seed=seed))
+    assert check_entity_independence(rows, splits)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_all_samples_assigned_exactly_once(seed):
+    rows = _meta_rows(500, 60, 4, seed)
+    splits = create_splits(rows, SplitSpec(fractions=(0.7, 0.3), seed=seed))
+    assigned = [u for us in splits.values() for u in us]
+    assert len(assigned) == len(rows)
+    assert len(set(assigned)) == len(rows)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_split_fractions_approximately_met(seed):
+    # many small entities => fractions achievable within entity granularity
+    rows = _meta_rows(2000, 500, 5, seed)
+    spec = SplitSpec(fractions=(0.8, 0.1, 0.1), seed=seed)
+    splits = create_splits(rows, spec)
+    for frac, name in zip(spec.fractions, spec.names):
+        got = len(splits[name]) / len(rows)
+        assert abs(got - frac) < 0.05
+
+
+def test_class_mix_approximately_uniform_across_splits():
+    rows = _meta_rows(3000, 600, 3, seed=0)
+    splits = create_splits(rows, SplitSpec(fractions=(0.5, 0.5), seed=0))
+    by_uuid = {r.uuid: r for r in rows}
+    mixes = []
+    for name, us in splits.items():
+        counts = np.zeros(3)
+        for u in us:
+            counts[by_uuid[u].label] += 1
+        mixes.append(counts / counts.sum())
+    assert np.abs(mixes[0] - mixes[1]).max() < 0.06
+
+
+def test_deterministic_given_seed():
+    rows = _meta_rows(400, 50, 4, seed=1)
+    a = create_splits(rows, SplitSpec(fractions=(0.8, 0.2), seed=9))
+    b = create_splits(rows, SplitSpec(fractions=(0.8, 0.2), seed=9))
+    assert a == b
