@@ -1,0 +1,73 @@
+"""Multi-host scaling: N training hosts vs one shared 4-node cluster.
+
+Aggregate and per-client throughput for 1, 2, 4, 8 clients, with per-node
+load balance and a node-failure scenario (one node dark mid-run; hedged
+requests + connection failover keep every loader delivering).  Node NICs are
+pinched to 10 GbE so egress contention — the effect multi-host loading must
+survive — is visible at benchmark scale.
+"""
+
+from __future__ import annotations
+
+from repro.core import MultiHostConfig, MultiHostRun
+
+from .common import make_store, write_csv
+
+NODE_EGRESS = 1.25e9        # 10 GbE per storage node
+N_NODES = 4
+ROUNDS = 60
+
+
+def _cfg(n_hosts: int, seed: int = 11) -> MultiHostConfig:
+    return MultiHostConfig(n_hosts=n_hosts, batch_size=256,
+                           prefetch_buffers=8, io_threads=8,
+                           route="high", backend="scylla",
+                           n_nodes=N_NODES, replication_factor=2,
+                           hedge_after=1.0, seed=seed,
+                           node_egress_bandwidth=NODE_EGRESS)
+
+
+def run(seed: int = 11) -> str:
+    store, uuids = make_store(n_samples=200_000)
+    lines = [f"{'clients':>7s} {'agg MB/s':>9s} {'per-client MB/s':>16s} "
+             f"{'fairness':>8s} {'node egress spread':>18s}"]
+    rows = []
+    for n in (1, 2, 4, 8):
+        rep = MultiHostRun(store, uuids, _cfg(n, seed)).run(ROUNDS)
+        per = [b / 1e6 for b in rep["per_client_Bps"]]
+        load = rep["cluster_load"]
+        egress = [v["egress_bytes"] for v in load.values()]
+        spread = max(egress) / max(min(egress), 1)
+        lines.append(f"{n:7d} {rep['aggregate_Bps']/1e6:9.0f} "
+                     f"{min(per):7.0f}-{max(per):<8.0f} "
+                     f"{rep['fairness']:8.2f} {spread:18.2f}")
+        rows.append(f"{n},{rep['aggregate_Bps']/1e6:.1f},"
+                    f"{min(per):.1f},{max(per):.1f},{rep['fairness']:.3f}")
+
+    # -- node-failure scenario: node goes dark 25% into the run -------------
+    lines.append("")
+    lines.append("node-failure scenario (4 clients, node1 dark mid-run):")
+    run4 = MultiHostRun(store, uuids, _cfg(4, seed)).start()
+    warm = run4.run(ROUNDS // 4)
+    run4.inject_failure("node1", after=0.0)
+    rep = run4.run(3 * ROUNDS // 4)         # completes or raises TimeoutError
+    lines.append(f"  before: {warm['aggregate_Bps']/1e6:.0f} MB/s   "
+                 f"after failure: {rep['aggregate_Bps']/1e6:.0f} MB/s   "
+                 f"failovers: {rep['failovers']}   "
+                 f"all {4 * 3 * ROUNDS // 4} batches delivered")
+    rows.append(f"4+fail,{rep['aggregate_Bps']/1e6:.1f},,,"
+                f"{rep['fairness']:.3f}")
+    write_csv("multihost_scaling.csv",
+              "clients,agg_MBps,client_min_MBps,client_max_MBps,fairness",
+              rows)
+    return "\n".join(lines)
+
+
+def main() -> None:
+    print(f"# Multi-host scaling — {N_NODES}-node cluster, 10 GbE node NICs, "
+          "high-latency route")
+    print(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,7 @@ import sys
 import time
 
 ALL = ["tightloop", "training", "batch_times", "connections", "backends",
-       "ramp", "roofline"]
+       "ramp", "multihost", "roofline"]
 
 
 def main() -> None:

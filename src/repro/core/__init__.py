@@ -6,6 +6,7 @@ from .cluster import Cluster, TokenRing
 from .connection import ConnectionPool, FetchResult
 from .kvstore import DataRow, KVStore, MetaRow, make_uuid, token_of
 from .loader import CassandraLoader, LoaderConfig, consume_with_step_time, tight_loop
+from .multihost import MultiHostConfig, MultiHostRun
 from .netsim import (BACKENDS, CASSANDRA, SCYLLA, TIERS, Clock, RealClock,
                      VirtualClock)
 from .prefetcher import (EpochPlan, InOrderPrefetcher, OutOfOrderPrefetcher,
@@ -16,6 +17,7 @@ __all__ = [
     "AssembledBatch", "BatchAssembler", "Cluster", "TokenRing",
     "ConnectionPool", "FetchResult", "DataRow", "KVStore", "MetaRow",
     "make_uuid", "token_of", "CassandraLoader", "LoaderConfig",
+    "MultiHostConfig", "MultiHostRun",
     "consume_with_step_time", "tight_loop", "BACKENDS", "CASSANDRA", "SCYLLA",
     "TIERS", "Clock", "RealClock", "VirtualClock", "EpochPlan",
     "InOrderPrefetcher", "OutOfOrderPrefetcher", "PrefetchConfig",

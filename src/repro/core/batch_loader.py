@@ -9,6 +9,7 @@ actually happens into a preallocated numpy arena (shared-memory analogue).
 
 from __future__ import annotations
 
+import functools
 import uuid as _uuid
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
@@ -64,12 +65,16 @@ class BatchAssembler:
         nbytes = sum(s.size for s in samples)
         self.bytes_assembled += nbytes
         if self._real_copy:
-            # Single contiguous arena; copies are cheap at test scale.
+            # Single contiguous arena; copies are cheap at test scale.  Each
+            # sample owns exactly ``size`` arena bytes (payloads are full-size
+            # since DataRow.materialize stopped truncating — clip defensively
+            # so a short payload can never smear into its neighbour's slot).
             arena = bytearray(nbytes)
             off = 0
             for s in samples:
                 if s.payload is not None:
-                    arena[off:off + len(s.payload)] = s.payload
+                    n = min(len(s.payload), s.size)
+                    arena[off:off + n] = s.payload[:n]
                 off += s.size
         delay = nbytes / self._copy_bw
         batch = AssembledBatch(seq=seq, samples=list(samples),
@@ -81,27 +86,35 @@ class BatchAssembler:
 
 
 class BatchRequest:
-    """In-order unit of work: all UUIDs of one batch requested at once."""
+    """In-order unit of work: all UUIDs of one batch requested at once.
+
+    Results are tracked per *slot*, not per uuid: a batch that spans an epoch
+    boundary can legitimately contain the same uuid twice (tail of one
+    permutation + head of the next), and keying a dict by uuid would then
+    wait forever on a count that can never be reached.
+    """
 
     def __init__(self, seq: int, epoch: int, uuids: List[_uuid.UUID],
                  pool: ConnectionPool, assembler: BatchAssembler,
                  on_ready: Callable[[AssembledBatch], None]) -> None:
         self.seq = seq
         self.epoch = epoch
-        self._order = list(uuids)          # batch composition is fixed (in-order)
-        self._results: dict = {}
+        self._results: List[Optional[FetchResult]] = [None] * len(uuids)
+        self._got = 0
         self._want = len(uuids)
         self._assembler = assembler
         self._on_ready = on_ready
-        for key in uuids:  # all requests posted to the driver at once
-            pool.fetch(key, self._one_done)
+        for i, key in enumerate(uuids):  # all requests posted to the driver at once
+            pool.fetch(key, functools.partial(self._one_done, i))
 
-    def _one_done(self, res: FetchResult) -> None:
-        self._results[res.uuid] = res
-        if len(self._results) == self._want:
-            ordered = [self._results[u] for u in self._order]
-            self._assembler.assemble(self.seq, self.epoch, ordered,
-                                     self._on_ready)
+    def _one_done(self, slot: int, res: FetchResult) -> None:
+        if self._results[slot] is not None:
+            return
+        self._results[slot] = res
+        self._got += 1
+        if self._got == self._want:
+            self._assembler.assemble(self.seq, self.epoch,
+                                     list(self._results), self._on_ready)
 
 
 __all__ = ["AssembledBatch", "BatchAssembler", "BatchRequest",

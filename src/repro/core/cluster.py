@@ -92,5 +92,42 @@ class Cluster:
     def node_names(self) -> List[str]:
         return list(self.nodes.keys())
 
+    # -- failure injection --------------------------------------------------
+    def fail_node(self, name: str) -> None:
+        """Take a node dark immediately (see schedule_failure for mid-run)."""
+        self.nodes[name].fail()
+
+    def recover_node(self, name: str) -> None:
+        self.nodes[name].recover()
+
+    def schedule_failure(self, name: str, after: float,
+                         recover_after: Optional[float] = None) -> None:
+        """Node ``name`` goes dark ``after`` seconds from now; optionally
+        comes back ``recover_after`` seconds later."""
+        node = self.nodes[name]
+        self.clock.schedule(after, node.fail)
+        if recover_after is not None:
+            self.clock.schedule(after + recover_after, node.recover)
+
+    def alive_nodes(self) -> List[str]:
+        return [n for n, node in self.nodes.items() if not node.down]
+
+    # -- load reporting -----------------------------------------------------
+    def load_report(self) -> Dict[str, Dict[str, float]]:
+        """Per-node served-load snapshot (replica-aware routing makes these
+        diverge under contention; the multi-host benchmark prints them)."""
+        now = self.clock.now()
+        report: Dict[str, Dict[str, float]] = {}
+        for name, node in self.nodes.items():
+            report[name] = {
+                "requests": node.requests_served,
+                "egress_bytes": node.egress_bytes,
+                "disk_bytes": node.disk_bytes,
+                "egress_busy_frac": (node.egress.fifo.busy_seconds
+                                     / max(now, 1e-9)),
+                "down": float(node.down),
+            }
+        return report
+
 
 __all__ = ["TokenRing", "Cluster"]

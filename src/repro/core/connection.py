@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import uuid as _uuid
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Iterable, List, Optional
 
 import numpy as np
 
@@ -65,23 +65,38 @@ class ConnectionPool:
             self._conns_by_node[node.name].append(conn)
         self.requests_sent = 0
         self.bytes_received = 0
+        self.failovers = 0
 
     # -- routing ---------------------------------------------------------
     def _pick_connection(self, key: _uuid.UUID,
-                         exclude: Optional[SimConnection] = None) -> SimConnection:
-        """Token-aware: least-loaded connection to any replica of ``key``."""
+                         exclude: Iterable[SimConnection] = ()) -> SimConnection:
+        """Token-aware: least-loaded connection to a *live* replica of
+        ``key``; falls back to any live node, then to anything at all (a
+        totally dark cluster still gets a target, and the request fails)."""
+        excluded = set(exclude)
         replicas = self.cluster.ring.replicas(key, self.cluster.rf)
         candidates: List[SimConnection] = []
         for name in replicas:
             candidates.extend(self._conns_by_node.get(name, []))
         if not candidates:  # client holds no connection to a replica: any conn
             candidates = self.connections
-        pool = [c for c in candidates if c is not exclude] or candidates
+        pool = ([c for c in candidates if not c.node_down and c not in excluded]
+                or [c for c in self.connections
+                    if not c.node_down and c not in excluded]
+                or [c for c in candidates if c not in excluded]
+                or candidates)
         return min(pool, key=lambda c: (c.inflight, c.conn_id))
 
     # -- fetch -------------------------------------------------------------
     def fetch(self, key: _uuid.UUID, on_done: Callable[[FetchResult], None]) -> None:
-        """Single-row read: features + label in one query (Sec. 3.1)."""
+        """Single-row read: features + label in one query (Sec. 3.1).
+
+        A connection error (target node down) triggers failover: the request
+        is re-sent on a connection to a different node.  Once every distinct
+        connection has failed, retries continue after an RTT of backoff —
+        so a cluster-wide outage surfaces as the caller's timeout, while a
+        node that recovers mid-run is picked up automatically.
+        """
         row = self.cluster.store.get_data(key)
         t0 = self.clock.now()
         state = {"done": False}
@@ -96,17 +111,35 @@ class ConnectionPool:
                                 payload=payload, t_issued=t0, t_done=t_done,
                                 conn_id=conn.conn_id, hedged=hedged))
 
-        conn = self._pick_connection(key)
-        self.requests_sent += 1
-        conn.request(row.size, lambda t: complete(conn, False, t))
+        def attempt(conn: SimConnection, hedged: bool, tried: frozenset) -> None:
+            self.requests_sent += 1
+
+            def failed(_t: float) -> None:
+                if state["done"]:
+                    return  # the other (hedged) attempt already answered
+                self.failovers += 1
+                now_tried = tried | {conn}
+                if len(now_tried) >= len(self.connections):
+                    # everything failed once: back off an RTT, start over
+                    self.clock.schedule(
+                        max(self.route.rtt, 1e-3),
+                        lambda: state["done"] or attempt(
+                            self._pick_connection(key), hedged, frozenset()))
+                    return
+                attempt(self._pick_connection(key, exclude=now_tried),
+                        hedged, now_tried)
+
+            conn.request(row.size, lambda t: complete(conn, hedged, t), failed)
+
+        first = self._pick_connection(key)
+        attempt(first, False, frozenset())
 
         if self.hedge_after is not None:
             def maybe_hedge() -> None:
                 if state["done"]:
                     return
-                backup = self._pick_connection(key, exclude=conn)
-                self.requests_sent += 1
-                backup.request(row.size, lambda t: complete(backup, True, t))
+                backup = self._pick_connection(key, exclude=(first,))
+                attempt(backup, True, frozenset({first}))
 
             self.clock.schedule(self.hedge_after, maybe_hedge)
 

@@ -35,11 +35,13 @@ class DataRow:
     payload: Optional[bytes] = None  # None => lazy blob (benchmarks)
 
     def materialize(self) -> bytes:
+        """Full-size payload — always ``len() == self.size`` so arena copies
+        and ``bytes_received`` accounting line up with ``FetchResult.size``."""
         if self.payload is not None:
             return self.payload
         # Deterministic pseudo-payload derived from the uuid.
         seed = int.from_bytes(self.uuid.bytes[:8], "little")
-        return np.random.default_rng(seed).bytes(min(self.size, 64))
+        return np.random.default_rng(seed).bytes(self.size)
 
 
 @dataclass

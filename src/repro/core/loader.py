@@ -53,10 +53,14 @@ class CassandraLoader:
         self.cluster = cluster or Cluster(
             self.clock, store, backend=cfg.backend, n_nodes=cfg.n_nodes,
             rf=cfg.replication_factor, seed=cfg.seed + 5)
+        # Pool randomness is decorrelated per shard (each host sees its own
+        # network weather); the *plan* seed must stay shared across shards so
+        # every host computes the same global shuffle.
         self.pool = ConnectionPool(
             self.clock, self.cluster, TIERS[cfg.route],
             io_threads=cfg.io_threads, conns_per_thread=cfg.conns_per_thread,
-            seed=cfg.seed + 11, hedge_after=cfg.hedge_after,
+            seed=cfg.seed + 11 + 7919 * cfg.shard_id,
+            hedge_after=cfg.hedge_after,
             materialize=cfg.materialize)
         self.plan = EpochPlan(uuids, seed=cfg.seed, shard_id=cfg.shard_id,
                               num_shards=cfg.num_shards)
@@ -103,8 +107,9 @@ def tight_loop(loader: CassandraLoader, n_batches: int,
     for _ in range(n_batches):
         loader.next_batch(timeout=timeout)
     st = loader.stats
+    skip = max(0, min(2, n_batches - 2))   # short runs: never a negative slice
     return {
-        "throughput_Bps": st.throughput(skip=min(2, n_batches - 2)),
+        "throughput_Bps": st.throughput(skip=skip),
         "batches": n_batches,
         "batch_times": st.batch_times(skip=1),
         "disk_bytes": loader.cluster.total_disk_bytes(),
@@ -120,9 +125,10 @@ def consume_with_step_time(loader: CassandraLoader, n_batches: int,
         loader.next_batch(timeout=timeout)
         loader.clock.sleep(step_time)
     st = loader.stats
+    skip = max(0, min(2, n_batches - 2))   # short runs: never a negative slice
     return {
         "samples_per_s": st.samples_per_second(loader.cfg.batch_size,
-                                               skip=min(2, n_batches - 2)),
+                                               skip=skip),
         "batch_times": st.batch_times(skip=1),
     }
 

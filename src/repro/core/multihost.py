@@ -1,0 +1,194 @@
+"""Multi-host loading: N training hosts against one shared cluster.
+
+The paper's scaling story (Sec. 4, multi-GPU training) has several training
+hosts hammering the same database cluster at once; what makes that realistic
+here is that all the *shared* server-side resources — per-node disk and NIC
+egress FIFOs, backend service processes — live in one ``Cluster`` on one
+``VirtualClock``, while each host brings its own ``ConnectionPool`` (own TCP
+connections, own AIMD processes, own ingress NIC).  Adding clients therefore
+degrades per-client throughput through genuine egress/disk contention, not
+through an ad-hoc penalty factor.
+
+``MultiHostRun`` wires up N ``CassandraLoader`` shards (disjoint contiguous
+strips of one global shuffle — see ``EpochPlan``) and drives them in
+round-robin lockstep: one batch per host per round, so every host has
+consumed the same number of batches whenever control returns to the caller.
+That lockstep is what makes ``checkpoint()`` consistent: the per-shard
+``(epoch, cursor)`` states it captures all correspond to the same global
+batch boundary, and ``start(checkpoint)`` resumes every shard from exactly
+that boundary.
+
+Failure injection (``inject_failure``) takes a ``SimServerNode`` dark
+mid-run; hedged requests plus the connection-pool failover path keep all
+loaders alive through it (requests re-route to live replicas).
+"""
+
+from __future__ import annotations
+
+import uuid as _uuid
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from .cluster import Cluster
+from .kvstore import KVStore
+from .loader import CassandraLoader, LoaderConfig
+from .netsim import DISK_BANDWIDTH, NIC_BANDWIDTH, VirtualClock
+
+
+@dataclass
+class MultiHostConfig:
+    """N-host run over a shared cluster; loader knobs mirror LoaderConfig."""
+
+    n_hosts: int = 2
+    batch_size: int = 256
+    prefetch_buffers: int = 8
+    io_threads: int = 8
+    conns_per_thread: int = 2
+    out_of_order: bool = True
+    incremental_ramp: bool = True
+    ramp_every: int = 4
+    route: str = "high"
+    backend: str = "scylla"
+    n_nodes: int = 4
+    replication_factor: int = 2
+    hedge_after: Optional[float] = 1.0   # stragglers + failover need hedging
+    seed: int = 0
+    materialize: bool = False
+    # Shared-cluster capacity: per-node NIC/disk.  The default is the paper's
+    # 50 Gb/s NIC; pinch it (e.g. 1-10 GbE) to study egress contention as the
+    # client count grows.
+    node_egress_bandwidth: float = NIC_BANDWIDTH
+    node_disk_bandwidth: float = DISK_BANDWIDTH
+
+    def loader_config(self, shard_id: int) -> LoaderConfig:
+        return LoaderConfig(
+            batch_size=self.batch_size,
+            prefetch_buffers=self.prefetch_buffers,
+            io_threads=self.io_threads,
+            conns_per_thread=self.conns_per_thread,
+            out_of_order=self.out_of_order,
+            incremental_ramp=self.incremental_ramp,
+            ramp_every=self.ramp_every,
+            route=self.route,
+            backend=self.backend,
+            n_nodes=self.n_nodes,
+            replication_factor=self.replication_factor,
+            hedge_after=self.hedge_after,
+            seed=self.seed,
+            shard_id=shard_id,
+            num_shards=self.n_hosts,
+            materialize=self.materialize,
+            virtual_clock=True,
+        )
+
+
+class MultiHostRun:
+    """Coordinator for N sharded loaders on one clock + one cluster."""
+
+    def __init__(self, store: KVStore, uuids: List[_uuid.UUID],
+                 cfg: MultiHostConfig,
+                 clock: Optional[VirtualClock] = None,
+                 cluster: Optional[Cluster] = None) -> None:
+        if cfg.n_hosts < 1:
+            raise ValueError("need at least one host")
+        self.cfg = cfg
+        self.clock = clock or VirtualClock()
+        self.cluster = cluster or Cluster(
+            self.clock, store, backend=cfg.backend, n_nodes=cfg.n_nodes,
+            rf=cfg.replication_factor, seed=cfg.seed + 5,
+            disk_bandwidth=cfg.node_disk_bandwidth,
+            egress_bandwidth=cfg.node_egress_bandwidth)
+        self.loaders: List[CassandraLoader] = [
+            CassandraLoader(store, uuids, cfg.loader_config(i),
+                            clock=self.clock, cluster=self.cluster)
+            for i in range(cfg.n_hosts)
+        ]
+        self.rounds_consumed = 0
+        self._started = False
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self, checkpoint: Optional[Dict] = None) -> "MultiHostRun":
+        """Start all shards, either fresh or from a coordinated checkpoint."""
+        if checkpoint is None:
+            for ld in self.loaders:
+                ld.start()
+        else:
+            shards = checkpoint["shards"]
+            if len(shards) != len(self.loaders):
+                raise ValueError(
+                    f"checkpoint has {len(shards)} shards, run has "
+                    f"{len(self.loaders)} — resharding is not supported")
+            for ld, s in zip(self.loaders, shards):
+                ld.start(s["epoch"], s["cursor"])
+        self._started = True
+        return self
+
+    def inject_failure(self, node: str, after: float,
+                       recover_after: Optional[float] = None) -> None:
+        """Schedule ``node`` to go dark ``after`` virtual seconds from now."""
+        self.cluster.schedule_failure(node, after, recover_after)
+
+    # -- driving ------------------------------------------------------------
+    def run(self, n_rounds: int, step_time: float = 0.0,
+            timeout: float = 600.0) -> Dict:
+        """Consume ``n_rounds`` batches on every host, round-robin lockstep.
+
+        ``step_time`` models the per-step GPU compute all hosts perform in
+        parallel (one sleep per round, not per host).  Returns a report dict;
+        cumulative over repeated calls on the same run.
+        """
+        if not self._started:
+            self.start()
+        t0 = self.clock.now()
+        bytes0 = [ld.pool.bytes_received for ld in self.loaders]
+        for _ in range(n_rounds):
+            for ld in self.loaders:
+                ld.next_batch(timeout=timeout)
+            if step_time > 0.0:
+                self.clock.sleep(step_time)
+        self.rounds_consumed += n_rounds
+        return self._report(t0, bytes0, n_rounds)
+
+    def _report(self, t0: float, bytes0: List[int], n_rounds: int) -> Dict:
+        elapsed = max(self.clock.now() - t0, 1e-9)
+        per_client_bytes = [ld.pool.bytes_received - b0
+                            for ld, b0 in zip(self.loaders, bytes0)]
+        per_client_Bps = [b / elapsed for b in per_client_bytes]
+        return {
+            "n_hosts": self.cfg.n_hosts,
+            "rounds": n_rounds,
+            "elapsed_s": elapsed,
+            "aggregate_Bps": sum(per_client_bytes) / elapsed,
+            "per_client_Bps": per_client_Bps,
+            # fairness: worst/best per-client rate (1.0 = perfectly fair)
+            "fairness": (min(per_client_Bps) / max(max(per_client_Bps), 1e-9)
+                         if per_client_Bps else 0.0),
+            "failovers": sum(ld.pool.failovers for ld in self.loaders),
+            "requests_sent": sum(ld.pool.requests_sent for ld in self.loaders),
+            "cluster_load": self.cluster.load_report(),
+        }
+
+    # -- coordinated checkpointing ------------------------------------------
+    def checkpoint(self) -> Dict:
+        """Consistent snapshot: all shards are at the same batch boundary
+        (guaranteed by the round-robin driver)."""
+        consumed = {ld.prefetcher.consumed for ld in self.loaders}
+        if len(consumed) > 1:
+            raise RuntimeError(f"shards out of lockstep: consumed={consumed}")
+        return {
+            "rounds": self.rounds_consumed,
+            "num_shards": self.cfg.n_hosts,
+            "shards": [ld.state() for ld in self.loaders],
+        }
+
+    # -- introspection -------------------------------------------------------
+    def shard_sizes(self) -> List[int]:
+        return [len(ld.plan) for ld in self.loaders]
+
+    def describe(self) -> str:
+        return (f"{self.cfg.n_hosts} hosts x B={self.cfg.batch_size} "
+                f"-> {self.cfg.n_nodes}-node {self.cfg.backend} "
+                f"(rf={self.cfg.replication_factor}, {self.cfg.route} route)")
+
+
+__all__ = ["MultiHostConfig", "MultiHostRun"]

@@ -355,7 +355,12 @@ DISK_BANDWIDTH = 8.0e9  # 4x NVMe striped volume, bytes/s (paper: 7.4 GB/s obser
 
 
 class SimServerNode:
-    """One storage node: CPU service + striped disk + NIC egress."""
+    """One storage node: CPU service + striped disk + NIC egress.
+
+    A node can be taken *down* (failure injection for multi-host runs): while
+    down it serves nothing — in-flight requests that reach it fail, and the
+    client side is expected to fail over to another replica.
+    """
 
     def __init__(self, name: str, backend: BackendModel, rng: np.random.Generator,
                  disk_bandwidth: float = DISK_BANDWIDTH,
@@ -369,6 +374,14 @@ class SimServerNode:
         self._gc_until = 0.0
         self._next_gc = (self._rng.exponential(1.0 / backend.gc_rate)
                          if backend.gc_rate > 0 else float("inf"))
+        self.down = False
+        self.requests_served = 0
+
+    def fail(self) -> None:
+        self.down = True
+
+    def recover(self) -> None:
+        self.down = False
 
     def serve(self, t: float, nbytes: int) -> float:
         """Return the time at which the response starts leaving the node."""
@@ -381,11 +394,16 @@ class SimServerNode:
         t += self.backend.service_seconds(self._rng)
         disk_bytes = int(nbytes * self.backend.read_amplification)
         t = self.disk.acquire(t, disk_bytes)
+        self.requests_served += 1
         return self.egress.acquire(t, nbytes)
 
     @property
     def disk_bytes(self) -> int:
         return self.disk.bytes_total
+
+    @property
+    def egress_bytes(self) -> int:
+        return self.egress.bytes_total
 
 
 class SimConnection:
@@ -412,28 +430,52 @@ class SimConnection:
         self._client_ingress = client_ingress
         self.inflight = 0
         self.bytes_done = 0
+        self.failed_requests = 0
         self._pending: list = []  # queued beyond MAX_INFLIGHT
         self.trace: List = []  # (t_done, nbytes) for Fig. 5/6 style traces
 
-    def request(self, nbytes: int, on_done: Callable[[float], None]) -> None:
-        if self.inflight >= self.MAX_INFLIGHT:
-            self._pending.append((nbytes, on_done))
-            return
-        self._dispatch(nbytes, on_done)
+    @property
+    def node_name(self) -> str:
+        return self._node.name
 
-    def _dispatch(self, nbytes: int, on_done: Callable[[float], None]) -> None:
+    @property
+    def node_down(self) -> bool:
+        return self._node.down
+
+    def request(self, nbytes: int, on_done: Callable[[float], None],
+                on_fail: Optional[Callable[[float], None]] = None) -> None:
+        if self.inflight >= self.MAX_INFLIGHT:
+            self._pending.append((nbytes, on_done, on_fail))
+            return
+        self._dispatch(nbytes, on_done, on_fail)
+
+    def _dispatch(self, nbytes: int, on_done: Callable[[float], None],
+                  on_fail: Optional[Callable[[float], None]] = None) -> None:
         # Staged events so every shared resource (disk, NIC egress, wire,
         # client ingress) is acquired in true arrival order — a FIFO advanced
         # with out-of-order timestamps would inflate queue waits.
         self.inflight += 1
         jitter = 1.0 + self._route.jitter * float(self._rng.uniform(-1.0, 1.0))
         self._clock.schedule(0.5 * self._route.rtt * jitter,
-                             self._at_server, nbytes, on_done, jitter)
+                             self._at_server, nbytes, on_done, on_fail, jitter)
 
-    def _at_server(self, nbytes: int, on_done, jitter: float) -> None:
+    def _at_server(self, nbytes: int, on_done, on_fail, jitter: float) -> None:
+        if self._node.down:
+            # Connection reset: the error travels back one half-RTT; the
+            # caller (ConnectionPool) is responsible for failing over.
+            self._clock.schedule(0.5 * self._route.rtt * jitter,
+                                 self._fail, on_fail)
+            return
         t = self._clock.now()
         t_out = self._node.serve(t, nbytes)      # service + disk + NIC egress
         self._clock.schedule(t_out - t, self._at_wire, nbytes, on_done, jitter)
+
+    def _fail(self, on_fail: Optional[Callable[[float], None]]) -> None:
+        self.inflight -= 1
+        self.failed_requests += 1
+        self._drain_pending()
+        if on_fail is not None:
+            on_fail(self._clock.now())
 
     def _at_wire(self, nbytes: int, on_done, jitter: float) -> None:
         t = self._clock.now()
@@ -455,10 +497,13 @@ class SimConnection:
         self.bytes_done += nbytes
         now = self._clock.now()
         self.trace.append((now, nbytes))
-        if self._pending:
-            nb, cb = self._pending.pop(0)
-            self._dispatch(nb, cb)
+        self._drain_pending()
         on_done(now)
+
+    def _drain_pending(self) -> None:
+        if self._pending and self.inflight < self.MAX_INFLIGHT:
+            nb, cb, fb = self._pending.pop(0)
+            self._dispatch(nb, cb, fb)
 
     def throughput_series(self, window: float = 0.5):
         """Windowed throughput trace (t, bytes/s) — reproduces Fig. 5/6."""

@@ -42,17 +42,32 @@ class PrefetchConfig:
 
 class EpochPlan:
     """Seeded uniform permutation per epoch — the 'predetermined' future
-    requests that make prefetching possible (Sec. 3.4)."""
+    requests that make prefetching possible (Sec. 3.4).
+
+    With ``num_shards > 1`` every host constructs the same global shuffle
+    (seeded by ``(seed, num_shards)``) and takes its contiguous strip, so the
+    N shards are disjoint, jointly cover the dataset, and differ in size by
+    at most one sample when N does not divide the dataset.  Each shard then
+    reshuffles *its own strip* per epoch.
+    """
 
     def __init__(self, uuids: List[_uuid.UUID], seed: int = 0,
                  shard_id: int = 0, num_shards: int = 1) -> None:
+        if num_shards < 1 or not 0 <= shard_id < num_shards:
+            raise ValueError(f"bad shard spec {shard_id}/{num_shards}")
         if num_shards > 1:
             # per-host shard of the global UUID list (multi-host loading):
             # contiguous strips of the *shuffled* list stay unbiased.
-            self._uuids = list(uuids[shard_id::num_shards])
+            n = len(uuids)
+            order = np.random.default_rng((seed, num_shards)).permutation(n)
+            lo = (shard_id * n) // num_shards
+            hi = ((shard_id + 1) * n) // num_shards
+            self._uuids = [uuids[i] for i in order[lo:hi]]
         else:
             self._uuids = list(uuids)
         self._seed = seed
+        self.shard_id = shard_id
+        self.num_shards = num_shards
 
     def __len__(self) -> int:
         return len(self._uuids)
@@ -98,6 +113,19 @@ class _PrefetcherBase:
         return min(k, 1 + self.consumed // self.cfg.ramp_every)
 
     # -- checkpoint/restart ------------------------------------------------
+    def _set_origin(self, epoch: int, cursor: int) -> None:
+        """Normalize a restart position: a cursor at/past the end of this
+        shard's epoch (possible when shards divide unevenly and a global
+        batch count is mapped onto each shard) rolls into later epochs."""
+        n = len(self.plan)
+        if n == 0:
+            raise ValueError("EpochPlan shard is empty — more shards than "
+                             "samples (or an empty dataset)")
+        if cursor < 0:
+            raise ValueError(f"negative cursor {cursor}")
+        self._epoch0 = epoch + cursor // n
+        self._cursor0 = cursor % n
+
     def state(self) -> dict:
         """Loader position for fault-tolerant restart (batch granularity)."""
         total = self.consumed * self.cfg.batch_size + self._cursor0
@@ -123,8 +151,8 @@ class InOrderPrefetcher(_PrefetcherBase):
         self._stream: Optional[Iterator] = None
 
     def start(self, epoch: int = 0, cursor: int = 0) -> None:
-        self._epoch0, self._cursor0 = epoch, cursor
-        self._stream = self.plan.iter_from(epoch, cursor)
+        self._set_origin(epoch, cursor)
+        self._stream = self.plan.iter_from(self._epoch0, self._cursor0)
         self._started = True
         self._fill()
 
@@ -176,9 +204,9 @@ class OutOfOrderPrefetcher(_PrefetcherBase):
         self._cur_epoch = 0
 
     def start(self, epoch: int = 0, cursor: int = 0) -> None:
-        self._epoch0, self._cursor0 = epoch, cursor
-        self._cur_epoch = epoch
-        self._stream = self.plan.iter_from(epoch, cursor)
+        self._set_origin(epoch, cursor)
+        self._cur_epoch = self._epoch0
+        self._stream = self.plan.iter_from(self._epoch0, self._cursor0)
         self._started = True
         self._fill()
 

@@ -67,15 +67,18 @@ def _ssm_scan_chunked(da: jax.Array, dbx: jax.Array, h0: jax.Array,
 
     def chunk_step(h, inp):
         a, b = inp                                    # (B, chunk, D, N)
-        # prefix within chunk via associative scan
+        # prefix within chunk via associative scan — in f32: the stored scan
+        # elements stay bf16 (that is what dominates HBM), but accumulating
+        # the prefix products in bf16 drifts away from the sequential decode
+        # recurrence, which carries f32 state.
         def combine(l, r):
             al, bl = l
             ar, br = r
             return al * ar, bl * ar + br
 
-        a_cum, b_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
-        h_all = (a_cum.astype(jnp.float32) * h[:, None]
-                 + b_cum.astype(jnp.float32))         # (B, chunk, D, N)
+        a_cum, b_cum = jax.lax.associative_scan(
+            combine, (a.astype(jnp.float32), b.astype(jnp.float32)), axis=1)
+        h_all = a_cum * h[:, None] + b_cum            # (B, chunk, D, N)
         # emit per-step states in the input dtype (bf16 on the train path)
         return h_all[:, -1], h_all.astype(a.dtype)
 

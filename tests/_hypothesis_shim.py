@@ -1,0 +1,95 @@
+"""Deterministic stand-in for the slice of the hypothesis API this suite uses.
+
+When the real ``hypothesis`` package is installed (see requirements-dev.txt)
+it is always preferred — ``conftest.py`` only installs this module under the
+name ``hypothesis`` when the import fails.  The shim keeps the property tests
+meaningful without the dependency: each ``@given`` test is run against a
+deterministic sample of the strategy space (boundary values first, then
+seeded pseudo-random draws), so the suite collects and exercises the same
+code paths everywhere, while full randomized runs remain available wherever
+hypothesis is actually installed.
+
+Only ``given``, ``settings``, ``strategies.integers`` and
+``strategies.booleans`` are provided — exactly what the tests import.
+"""
+
+from __future__ import annotations
+
+import inspect
+import random
+from typing import Any, Callable, List
+
+_MAX_EXAMPLES_CAP = 25          # keep the dependency-free run fast
+_SHIM_SEED = 0x5EED
+
+
+class _Strategy:
+    """A strategy = boundary examples + a seeded random draw."""
+
+    def __init__(self, boundaries: List[Any], draw: Callable[[random.Random], Any]):
+        self._boundaries = boundaries
+        self._draw = draw
+
+    def example(self, i: int, rng: random.Random) -> Any:
+        if i < len(self._boundaries):
+            return self._boundaries[i]
+        return self._draw(rng)
+
+
+class _StrategiesModule:
+    @staticmethod
+    def integers(min_value: int = None, max_value: int = None) -> _Strategy:
+        lo = -(2 ** 63) if min_value is None else int(min_value)
+        hi = 2 ** 63 - 1 if max_value is None else int(max_value)
+        mid = min(max(0, lo), hi)
+        bounds = list(dict.fromkeys([lo, hi, mid]))
+        return _Strategy(bounds, lambda rng: rng.randint(lo, hi))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy([False, True], lambda rng: rng.random() < 0.5)
+
+
+strategies = _StrategiesModule()
+
+
+def settings(**kw):
+    """Decorator: record max_examples; deadline & friends are ignored."""
+
+    def deco(fn):
+        fn._shim_settings = dict(kw)
+        return fn
+
+    return deco
+
+
+def given(*args, **strategy_kw):
+    def deco(fn):
+        if args:
+            # hypothesis maps positional strategies to the *last* parameters
+            params = [p for p in inspect.signature(fn).parameters]
+            for name, strat in zip(params[len(params) - len(args):], args):
+                strategy_kw.setdefault(name, strat)
+
+        def wrapper(*a, **kw):
+            opts = getattr(fn, "_shim_settings", None) \
+                or getattr(wrapper, "_shim_settings", None) or {}
+            n = min(int(opts.get("max_examples", 10)), _MAX_EXAMPLES_CAP)
+            rng = random.Random(_SHIM_SEED)
+            for i in range(n):
+                drawn = {k: s.example(i, rng) for k, s in strategy_kw.items()}
+                fn(*a, **kw, **drawn)
+
+        # NOTE: no functools.wraps — pytest must see the (*a, **kw) signature,
+        # not the original one, or it would try to inject the strategy
+        # parameters as fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis_shim = True
+        return wrapper
+
+    return deco
+
+
+__all__ = ["given", "settings", "strategies"]

@@ -9,6 +9,8 @@ from repro.core.connection import ConnectionPool
 from repro.core.netsim import TIERS
 from repro.data.datasets import SyntheticImageDataset, ingest
 
+pytestmark = pytest.mark.slow      # full cluster sims; skip with -m "not slow"
+
 
 @pytest.fixture(scope="module")
 def store_uuids():

@@ -65,13 +65,17 @@ def test_compressed_psum_error_feedback_converges():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.train.compression import compressed_psum_grads
+        try:
+            from jax import shard_map
+        except ImportError:                      # jax 0.4.x spelling
+            from jax.experimental.shard_map import shard_map
         mesh = jax.make_mesh((8,), ("data",))
         grads = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 4, 16))}
         errors = {"w": jnp.zeros((8, 4, 16))}
 
-        f = jax.shard_map(lambda g, e: compressed_psum_grads(g, e, "data"),
-                          mesh=mesh, in_specs=(P("data"), P("data")),
-                          out_specs=(P("data"), P("data")))
+        f = shard_map(lambda g, e: compressed_psum_grads(g, e, "data"),
+                      mesh=mesh, in_specs=(P("data"), P("data")),
+                      out_specs=(P("data"), P("data")))
         applied = jnp.zeros((8, 4, 16))
         steps = 12
         for _ in range(steps):

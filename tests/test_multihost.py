@@ -1,0 +1,220 @@
+"""Multi-host loading: shard correctness, coordinated checkpoints,
+contention, node failure."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CassandraLoader, EpochPlan, KVStore, LoaderConfig,
+                        MultiHostConfig, MultiHostRun, tight_loop)
+from repro.core.kvstore import make_uuid
+from repro.data.datasets import SyntheticImageDataset, ingest
+
+
+@pytest.fixture(scope="module")
+def store_uuids():
+    store = KVStore()
+    uuids = ingest(store, SyntheticImageDataset(n_samples=24_000, seed=5))
+    return store, uuids
+
+
+def _mh_cfg(n_hosts, **kw):
+    defaults = dict(n_hosts=n_hosts, batch_size=128, prefetch_buffers=4,
+                    io_threads=4, route="high", backend="scylla",
+                    n_nodes=4, replication_factor=2, hedge_after=1.0,
+                    seed=13, node_egress_bandwidth=1.2e8)
+    defaults.update(kw)
+    return MultiHostConfig(**defaults)
+
+
+# ---------------------------------------------------------------------------
+# EpochPlan sharding (the strided-slice bug fix)
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 400), num_shards=st.integers(1, 9),
+       seed=st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_shards_disjoint_and_cover(n, num_shards, seed):
+    """Shards partition the dataset exactly, for any uneven division."""
+    rng = np.random.default_rng(7)
+    uuids = [make_uuid(rng) for _ in range(n)]
+    shards = [EpochPlan(uuids, seed=seed, shard_id=i, num_shards=num_shards)
+              for i in range(num_shards)]
+    sizes = [len(s) for s in shards]
+    assert sum(sizes) == n
+    assert max(sizes) - min(sizes) <= 1          # balanced strips
+    seen = [str(u) for s in shards for u in s._uuids]
+    assert len(set(seen)) == len(seen) == n      # disjoint
+    assert set(seen) == {str(u) for u in uuids}  # jointly cover
+
+
+def test_shard_strip_is_shuffled_not_strided():
+    """Contiguous strips of a *shuffled* list (not uuids[i::N])."""
+    rng = np.random.default_rng(0)
+    uuids = [make_uuid(rng) for _ in range(100)]
+    shard0 = EpochPlan(uuids, seed=1, shard_id=0, num_shards=4)._uuids
+    assert shard0 != uuids[0::4]                 # not the old strided slice
+    assert shard0 != uuids[:25]                  # not an unshuffled strip
+
+
+def test_epoch_plan_rejects_bad_shard_spec():
+    uuids = [make_uuid(np.random.default_rng(0)) for _ in range(8)]
+    with pytest.raises(ValueError):
+        EpochPlan(uuids, shard_id=4, num_shards=4)
+    with pytest.raises(ValueError):
+        EpochPlan(uuids, shard_id=-1, num_shards=2)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint state round-trips (uneven shards, both prefetchers)
+# ---------------------------------------------------------------------------
+
+def _loader(store, uuids, **kw):
+    defaults = dict(batch_size=32, prefetch_buffers=4, io_threads=4,
+                    route="low", backend="scylla", seed=7)
+    defaults.update(kw)
+    return CassandraLoader(store, uuids, LoaderConfig(**defaults))
+
+
+@pytest.mark.parametrize("num_shards", [3, 7])
+def test_state_epoch_math_uneven_shards(store_uuids, num_shards):
+    """consumed*B walks the (epoch, cursor) odometer of THIS shard's size."""
+    store, uuids = store_uuids
+    small = uuids[:1000]                        # 1000 % 3 and % 7 != 0
+    ld = _loader(store, small, shard_id=1, num_shards=num_shards,
+                 out_of_order=False)
+    n = len(ld.plan)
+    assert n == len(small) // num_shards or n == len(small) // num_shards + 1
+    ld.start()
+    batches = (n // 32) + 2                     # crosses the epoch boundary
+    for _ in range(batches):
+        ld.next_batch()
+    s = ld.state()
+    total = batches * 32
+    assert s["epoch"] == total // n
+    assert s["cursor"] == total % n
+
+
+@pytest.mark.parametrize("ooo", [False, True])
+def test_checkpoint_restore_roundtrip(store_uuids, ooo):
+    store, uuids = store_uuids
+    small = uuids[:1000]
+    ld = _loader(store, small, shard_id=0, num_shards=3, out_of_order=ooo)
+    ld.start()
+    for _ in range(5):
+        ld.next_batch()
+    s = ld.state()
+
+    res = _loader(store, small, shard_id=0, num_shards=3, out_of_order=ooo)
+    res.start(s["epoch"], s["cursor"])
+    assert res.state() == {"epoch": s["epoch"], "cursor": s["cursor"],
+                           "consumed": 0}
+    if not ooo:
+        # in-order: resumed delivery equals the original stream continuation
+        cont = ld.next_batch().uuids
+        assert res.next_batch().uuids == cont
+    else:
+        # OOO reorders within the in-flight window, but must only deliver
+        # samples from the plan at/after the restored cursor (same epoch)
+        perm = res.plan.permutation(s["epoch"])
+        allowed = {str(u) for u in perm[s["cursor"]:]}
+        got = [str(u) for u in res.next_batch().uuids]
+        assert set(got) <= allowed
+        assert len(set(got)) == len(got)
+
+
+def test_restart_cursor_past_shard_end_rolls_over(store_uuids):
+    """A cursor >= shard length (uneven global batch mapping) must normalize
+    instead of silently skipping an epoch's worth of data."""
+    store, uuids = store_uuids
+    ld = _loader(store, uuids[:1000], shard_id=2, num_shards=3)
+    n = len(ld.plan)
+    ld.start(epoch=0, cursor=n + 5)
+    assert ld.state() == {"epoch": 1, "cursor": 5, "consumed": 0}
+
+
+def test_empty_shard_raises(store_uuids):
+    store, uuids = store_uuids
+    # 2 samples over 3 shards: the floor-strip formula leaves shard 0 empty
+    ld = _loader(store, uuids[:2], shard_id=0, num_shards=3)
+    assert len(ld.plan) == 0
+    with pytest.raises(ValueError):
+        ld.start()
+
+
+# ---------------------------------------------------------------------------
+# Short-run stats (the negative-skip bug fix)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_batches", [1, 2])
+def test_tight_loop_short_runs(store_uuids, n_batches):
+    store, uuids = store_uuids
+    ld = _loader(store, uuids[:4000], batch_size=64)
+    res = tight_loop(ld, n_batches=n_batches)
+    assert res["batches"] == n_batches
+    assert res["throughput_Bps"] >= 0.0         # was a negative-index misslice
+    assert res["net_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Multi-host coordinator
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_contention_sublinear_but_fair(store_uuids):
+    """Against a pinched shared cluster, aggregate throughput grows
+    sub-linearly with clients while per-client rates stay within a bound."""
+    store, uuids = store_uuids
+    agg = {}
+    for n in (1, 4):
+        rep = MultiHostRun(store, uuids, _mh_cfg(n)).run(12)
+        agg[n] = rep["aggregate_Bps"]
+        assert rep["fairness"] > 0.6            # no client starves
+    assert agg[4] > agg[1]                      # more clients -> more total
+    assert agg[4] < 3.5 * agg[1]                # ...but sub-linear (shared NICs)
+
+
+@pytest.mark.slow
+def test_node_failure_failover_keeps_loaders_alive(store_uuids):
+    store, uuids = store_uuids
+    run = MultiHostRun(store, uuids, _mh_cfg(4)).start()
+    run.run(4)                                  # requests now deep in flight
+    run.inject_failure("node1", after=0.0)
+    served_at_failure = run.cluster.nodes["node1"].requests_served
+    rep = run.run(12)                           # must not raise TimeoutError
+    assert rep["cluster_load"]["node1"]["down"] == 1.0
+    # the dark node served nothing after the failure fired
+    assert run.cluster.nodes["node1"].requests_served == served_at_failure
+    assert all(b > 0 for b in rep["per_client_Bps"])
+
+
+def test_coordinated_checkpoint_consistent_and_resumable(store_uuids):
+    store, uuids = store_uuids
+    cfg = _mh_cfg(3, node_egress_bandwidth=6.25e9, route="low",
+                  hedge_after=None)
+    run = MultiHostRun(store, uuids, cfg).start()
+    run.run(6)
+    ck = run.checkpoint()
+    assert ck["rounds"] == 6 and len(ck["shards"]) == 3
+    # all shards checkpoint the same consumed count (consistent boundary)
+    assert {s["consumed"] for s in ck["shards"]} == {6}
+
+    resumed = MultiHostRun(store, uuids, cfg).start(ck)
+    for ld, s in zip(resumed.loaders, ck["shards"]):
+        assert ld.state() == {"epoch": s["epoch"], "cursor": s["cursor"],
+                              "consumed": 0}
+    rep = resumed.run(3)
+    assert resumed.checkpoint()["rounds"] == 3
+    assert all(b > 0 for b in rep["per_client_Bps"])
+
+
+def test_checkpoint_shard_count_mismatch_rejected(store_uuids):
+    store, uuids = store_uuids
+    cfg = _mh_cfg(2, node_egress_bandwidth=6.25e9, route="low")
+    run = MultiHostRun(store, uuids, cfg).start()
+    run.run(2)
+    ck = run.checkpoint()
+    other = MultiHostRun(store, uuids, _mh_cfg(3, node_egress_bandwidth=6.25e9,
+                                               route="low"))
+    with pytest.raises(ValueError):
+        other.start(ck)

@@ -13,6 +13,8 @@ from repro.serve import ServeConfig, ServingEngine
 from repro.train.loop import TrainLoopConfig, run_training
 from repro.train.optimizer import OptimizerConfig
 
+pytestmark = pytest.mark.slow      # end-to-end train/serve; -m "not slow" skips
+
 
 def _tiny_arch(**kw):
     base = dict(name="tiny", family="dense", n_layers=2, d_model=64,
