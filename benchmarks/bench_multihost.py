@@ -5,6 +5,14 @@ load balance and a node-failure scenario (one node dark mid-run; hedged
 requests + connection failover keep every loader delivering).  Node NICs are
 pinched to 10 GbE so egress contention — the effect multi-host loading must
 survive — is visible at benchmark scale.
+
+Two extra sections cover the elastic/placement features:
+
+* placement policies — contiguous vs token-aware strips on the 4-node rf=2
+  cluster: replica-local hit fraction and per-node egress spread.
+* elastic resharding — a checkpoint taken with N hosts restored onto M
+  (4 -> 2 shrink, 2 -> 8 grow, and a 4 -> 2 resize with a node failing
+  mid-restore), reporting throughput across the resize.
 """
 
 from __future__ import annotations
@@ -18,13 +26,15 @@ N_NODES = 4
 ROUNDS = 60
 
 
-def _cfg(n_hosts: int, seed: int = 11) -> MultiHostConfig:
+def _cfg(n_hosts: int, seed: int = 11, placement: str = "contiguous"
+         ) -> MultiHostConfig:
     return MultiHostConfig(n_hosts=n_hosts, batch_size=256,
                            prefetch_buffers=8, io_threads=8,
                            route="high", backend="scylla",
                            n_nodes=N_NODES, replication_factor=2,
                            hedge_after=1.0, seed=seed,
-                           node_egress_bandwidth=NODE_EGRESS)
+                           node_egress_bandwidth=NODE_EGRESS,
+                           placement=placement)
 
 
 def run(seed: int = 11) -> str:
@@ -43,6 +53,41 @@ def run(seed: int = 11) -> str:
                      f"{rep['fairness']:8.2f} {spread:18.2f}")
         rows.append(f"{n},{rep['aggregate_Bps']/1e6:.1f},"
                     f"{min(per):.1f},{max(per):.1f},{rep['fairness']:.3f}")
+
+    # -- placement policies: contiguous vs token-aware ----------------------
+    lines.append("")
+    lines.append(f"placement policies (4 clients, {N_NODES}-node rf=2):")
+    lines.append(f"  {'policy':>12s} {'agg MB/s':>9s} "
+                 f"{'replica-local':>13s} {'egress imbalance':>16s}")
+    for policy in ("contiguous", "token_aware"):
+        rep = MultiHostRun(store, uuids,
+                           _cfg(4, seed, placement=policy)).run(ROUNDS // 2)
+        lines.append(f"  {policy:>12s} {rep['aggregate_Bps']/1e6:9.0f} "
+                     f"{rep['replica_local_hit_frac']:13.2f} "
+                     f"{rep['egress_imbalance']:16.2f}")
+        rows.append(f"4/{policy},{rep['aggregate_Bps']/1e6:.1f},,,"
+                    f"{rep['fairness']:.3f}")
+
+    # -- elastic resharding: N-host checkpoint restored onto M hosts --------
+    lines.append("")
+    lines.append("elastic resharding (checkpoint with N, restore with M):")
+    for old_n, new_n, fail in ((4, 2, None), (2, 8, None), (4, 2, "node2")):
+        before = MultiHostRun(store, uuids, _cfg(old_n, seed)).start()
+        rep0 = before.run(ROUNDS // 4)
+        ck = before.checkpoint()
+        after = MultiHostRun(store, uuids, _cfg(new_n, seed)).start(ck)
+        if fail is not None:
+            after.inject_failure(fail, after=0.5)
+        rep1 = after.run(ROUNDS // 4)
+        note = f" ({fail} dark mid-restore)" if fail else ""
+        lines.append(f"  {old_n} -> {new_n} hosts{note}: "
+                     f"{rep0['aggregate_Bps']/1e6:.0f} -> "
+                     f"{rep1['aggregate_Bps']/1e6:.0f} MB/s aggregate, "
+                     f"fairness {rep1['fairness']:.2f}, "
+                     f"failovers {rep1['failovers']}")
+        rows.append(f"{old_n}to{new_n}{'+fail' if fail else ''},"
+                    f"{rep1['aggregate_Bps']/1e6:.1f},,,"
+                    f"{rep1['fairness']:.3f}")
 
     # -- node-failure scenario: node goes dark 25% into the run -------------
     lines.append("")

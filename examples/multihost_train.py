@@ -1,13 +1,15 @@
 """Multi-host data-parallel training against one shared cluster.
 
-Four training hosts, each holding a disjoint shard of one global shuffle,
-consume batches in lockstep (one batch per host per step, modelling
-synchronous data parallelism) while a fixed per-step compute time emulates
-the GPU.  Midway, a coordinated checkpoint is taken, a storage node is
-killed, and the run is restored from the checkpoint on a fresh coordinator —
-demonstrating that (a) the checkpoint captures a consistent batch boundary
-across every shard and (b) hedged requests + connection failover ride
-through the node failure.
+Four training hosts, each owning a token-aware replica-skewed strip of one
+global shuffle, consume batches in lockstep (one batch per host per step,
+modelling synchronous data parallelism) while a fixed per-step compute time
+emulates the GPU.  Midway, a coordinated checkpoint is taken, the cluster
+"shrinks" — the run is restored onto TWO hosts (elastic N -> M resharding:
+the unfinished epoch is reflowed into two strips, nothing skipped, nothing
+repeated) — and a storage node is killed during the resized phase,
+demonstrating that (a) the checkpoint captures a consistent batch boundary,
+(b) the reflow preserves exactly-once delivery per epoch, and (c) hedged
+requests + connection failover ride through the node failure.
 
 Run: PYTHONPATH=src python examples/multihost_train.py
 """
@@ -16,35 +18,46 @@ from repro.core import KVStore, MultiHostConfig, MultiHostRun
 from repro.data.datasets import SyntheticImageDataset, ingest
 
 N_HOSTS = 4
+RESIZED_HOSTS = 2
 STEP_TIME = 0.05           # 50 ms of GPU compute per step
 STEPS_PER_PHASE = 40
+
+
+def _cfg(n_hosts: int) -> MultiHostConfig:
+    return MultiHostConfig(n_hosts=n_hosts, batch_size=256,
+                           prefetch_buffers=8, io_threads=8, route="high",
+                           backend="scylla", n_nodes=4, replication_factor=2,
+                           hedge_after=1.0, seed=4,
+                           node_egress_bandwidth=1.25e9,
+                           placement="token_aware")
 
 
 def main() -> None:
     store = KVStore()
     uuids = ingest(store, SyntheticImageDataset(n_samples=60_000, seed=0))
-    cfg = MultiHostConfig(n_hosts=N_HOSTS, batch_size=256, prefetch_buffers=8,
-                          io_threads=8, route="high", backend="scylla",
-                          n_nodes=4, replication_factor=2, hedge_after=1.0,
-                          seed=4, node_egress_bandwidth=1.25e9)
-    run = MultiHostRun(store, uuids, cfg).start()
+    run = MultiHostRun(store, uuids, _cfg(N_HOSTS)).start()
     print(f"{run.describe()}; shard sizes {run.shard_sizes()}\n")
 
     rep = run.run(STEPS_PER_PHASE, step_time=STEP_TIME)
     print(f"phase 1: {STEPS_PER_PHASE} steps x {N_HOSTS} hosts, "
           f"{rep['aggregate_Bps']/1e6:.0f} MB/s aggregate, "
-          f"fairness {rep['fairness']:.2f}")
+          f"fairness {rep['fairness']:.2f}, "
+          f"replica-local {rep['replica_local_hit_frac']:.0%}")
 
     ckpt = run.checkpoint()
     print(f"checkpoint at global step {ckpt['rounds']}: "
           + ", ".join(f"shard{i}=(e{s['epoch']},c{s['cursor']})"
                       for i, s in enumerate(ckpt["shards"])))
 
-    # simulate a crash + a node loss; restore on a fresh coordinator
-    run2 = MultiHostRun(store, uuids, cfg).start(ckpt)
+    # the cluster shrinks: restore the 4-host checkpoint onto 2 hosts
+    # (elastic reshard) and lose a storage node mid-phase on top
+    run2 = MultiHostRun(store, uuids, _cfg(RESIZED_HOSTS)).start(ckpt)
+    print(f"\nelastic restore {N_HOSTS} -> {RESIZED_HOSTS} hosts; "
+          f"shard sizes now {run2.shard_sizes()} "
+          "(interrupted epoch reflowed, exactly-once preserved)")
     run2.inject_failure("node2", after=0.5)
     rep2 = run2.run(STEPS_PER_PHASE, step_time=STEP_TIME)
-    print(f"phase 2 (restored, node2 dark mid-phase): "
+    print(f"phase 2 (resized, node2 dark mid-phase): "
           f"{rep2['aggregate_Bps']/1e6:.0f} MB/s aggregate, "
           f"{rep2['failovers']} failovers, fairness {rep2['fairness']:.2f}")
 
@@ -53,10 +66,11 @@ def main() -> None:
     for name, v in load.items():
         mark = " (down)" if v["down"] else ""
         print(f"  {name}: {v['requests']:6.0f} reqs, "
-              f"{v['egress_bytes']/1e9:5.2f} GB egress{mark}")
+              f"{v['egress_bytes']/1e9:5.2f} GB egress "
+              f"({v['egress_share']:.0%} share){mark}")
 
     resumed = run2.checkpoint()   # raises if shards drifted out of lockstep
-    print(f"\nresumed run advanced {resumed['rounds']} steps "
+    print(f"\nresized run advanced {resumed['rounds']} steps "
           f"(global step {ckpt['rounds'] + resumed['rounds']}) — "
           "all shards at one consistent boundary")
 

@@ -9,8 +9,11 @@ from .loader import CassandraLoader, LoaderConfig, consume_with_step_time, tight
 from .multihost import MultiHostConfig, MultiHostRun
 from .netsim import (BACKENDS, CASSANDRA, SCYLLA, TIERS, Clock, RealClock,
                      VirtualClock)
+from .placement import (PLACEMENT_POLICIES, global_order,
+                        preferred_node_subsets, replica_local_fraction,
+                        split_strips)
 from .prefetcher import (EpochPlan, InOrderPrefetcher, OutOfOrderPrefetcher,
-                         PrefetchConfig, make_prefetcher)
+                         PrefetchConfig, compute_reflow, make_prefetcher)
 from .splits import SplitSpec, check_entity_independence, create_splits
 
 __all__ = [
@@ -20,6 +23,8 @@ __all__ = [
     "MultiHostConfig", "MultiHostRun",
     "consume_with_step_time", "tight_loop", "BACKENDS", "CASSANDRA", "SCYLLA",
     "TIERS", "Clock", "RealClock", "VirtualClock", "EpochPlan",
+    "compute_reflow", "PLACEMENT_POLICIES", "global_order",
+    "preferred_node_subsets", "replica_local_fraction", "split_strips",
     "InOrderPrefetcher", "OutOfOrderPrefetcher", "PrefetchConfig",
     "make_prefetcher", "SplitSpec", "check_entity_independence",
     "create_splits",

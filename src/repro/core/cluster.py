@@ -73,6 +73,7 @@ class Cluster:
         self.store = store
         self.backend = backend_model
         self.rf = min(rf, n_nodes)
+        self.ring_seed = seed     # recorded so checkpoints can rebuild the ring
         names = [f"node{i}" for i in range(n_nodes)]
         self.nodes: Dict[str, SimServerNode] = {
             name: SimServerNode(name, backend_model,
@@ -115,13 +116,17 @@ class Cluster:
     # -- load reporting -----------------------------------------------------
     def load_report(self) -> Dict[str, Dict[str, float]]:
         """Per-node served-load snapshot (replica-aware routing makes these
-        diverge under contention; the multi-host benchmark prints them)."""
+        diverge under contention; the multi-host benchmark prints them).
+        ``egress_share`` is each node's fraction of total cluster egress —
+        the imbalance signal the placement policies compete on."""
         now = self.clock.now()
+        total_egress = sum(n.egress_bytes for n in self.nodes.values())
         report: Dict[str, Dict[str, float]] = {}
         for name, node in self.nodes.items():
             report[name] = {
                 "requests": node.requests_served,
                 "egress_bytes": node.egress_bytes,
+                "egress_share": node.egress_bytes / max(total_egress, 1),
                 "disk_bytes": node.disk_bytes,
                 "egress_busy_frac": (node.egress.fifo.busy_seconds
                                      / max(now, 1e-9)),

@@ -43,7 +43,8 @@ class ConnectionPool:
                  io_threads: int = 8, conns_per_thread: int = 2, seed: int = 99,
                  hedge_after: Optional[float] = None,
                  materialize: bool = False,
-                 client_ingress_bandwidth: float = NIC_BANDWIDTH) -> None:
+                 client_ingress_bandwidth: float = NIC_BANDWIDTH,
+                 preferred_nodes: Optional[Iterable[str]] = None) -> None:
         if isinstance(route, str):
             route = TIERS[route]
         self.clock = clock
@@ -51,6 +52,11 @@ class ConnectionPool:
         self.route = route
         self.materialize = materialize
         self.hedge_after = hedge_after
+        # Token-aware *placement* (see core/placement.py) skews this host's
+        # keys toward replicas on its preferred nodes; biasing routing the
+        # same way concentrates the host's egress there.  None = unbiased.
+        self.preferred_nodes = (frozenset(preferred_nodes)
+                                if preferred_nodes else None)
         self._rng = np.random.default_rng(seed)
         self.ingress = RateResource("client/ingress", client_ingress_bandwidth)
         n_conns = io_threads * conns_per_thread
@@ -66,13 +72,16 @@ class ConnectionPool:
         self.requests_sent = 0
         self.bytes_received = 0
         self.failovers = 0
+        self.served_by_node: Dict[str, int] = {}
 
     # -- routing ---------------------------------------------------------
     def _pick_connection(self, key: _uuid.UUID,
                          exclude: Iterable[SimConnection] = ()) -> SimConnection:
         """Token-aware: least-loaded connection to a *live* replica of
-        ``key``; falls back to any live node, then to anything at all (a
-        totally dark cluster still gets a target, and the request fails)."""
+        ``key`` — biased toward this host's preferred nodes when a preferred
+        replica is alive; falls back to any live node, then to anything at
+        all (a totally dark cluster still gets a target, and the request
+        fails)."""
         excluded = set(exclude)
         replicas = self.cluster.ring.replicas(key, self.cluster.rf)
         candidates: List[SimConnection] = []
@@ -80,7 +89,16 @@ class ConnectionPool:
             candidates.extend(self._conns_by_node.get(name, []))
         if not candidates:  # client holds no connection to a replica: any conn
             candidates = self.connections
-        pool = ([c for c in candidates if not c.node_down and c not in excluded]
+        live = [c for c in candidates if not c.node_down and c not in excluded]
+        # Bias only the *first* pick toward preferred nodes: hedge and
+        # failover re-picks (exclusions present) must divert to another
+        # replica, not back onto the same — possibly struggling — node.
+        if self.preferred_nodes and live and not excluded:
+            preferred = [c for c in live
+                         if c.node_name in self.preferred_nodes]
+            if preferred:
+                live = preferred
+        pool = (live
                 or [c for c in self.connections
                     if not c.node_down and c not in excluded]
                 or [c for c in candidates if c not in excluded]
@@ -106,6 +124,8 @@ class ConnectionPool:
                 return  # a hedge lost the race
             state["done"] = True
             self.bytes_received += row.size
+            name = conn.node_name
+            self.served_by_node[name] = self.served_by_node.get(name, 0) + 1
             payload = row.materialize() if self.materialize else row.payload
             on_done(FetchResult(uuid=key, label=row.label, size=row.size,
                                 payload=payload, t_issued=t0, t_done=t_done,

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import uuid as _uuid
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 from .cluster import Cluster
 from .connection import ConnectionPool
@@ -40,6 +40,10 @@ class LoaderConfig:
     num_shards: int = 1
     materialize: bool = False       # deliver real payload bytes
     virtual_clock: bool = True
+    # Token-aware placement: bias routing toward these storage nodes (the
+    # subset this host's shard keys were replica-skewed toward).  None keeps
+    # the unbiased least-loaded-replica routing.
+    preferred_nodes: Optional[Tuple[str, ...]] = None
 
 
 class CassandraLoader:
@@ -47,7 +51,8 @@ class CassandraLoader:
 
     def __init__(self, store: KVStore, uuids: List[_uuid.UUID],
                  cfg: LoaderConfig, clock: Optional[Clock] = None,
-                 cluster: Optional[Cluster] = None) -> None:
+                 cluster: Optional[Cluster] = None,
+                 plan: Optional[EpochPlan] = None) -> None:
         self.cfg = cfg
         self.clock = clock or (VirtualClock() if cfg.virtual_clock else RealClock())
         self.cluster = cluster or Cluster(
@@ -61,9 +66,13 @@ class CassandraLoader:
             io_threads=cfg.io_threads, conns_per_thread=cfg.conns_per_thread,
             seed=cfg.seed + 11 + 7919 * cfg.shard_id,
             hedge_after=cfg.hedge_after,
-            materialize=cfg.materialize)
-        self.plan = EpochPlan(uuids, seed=cfg.seed, shard_id=cfg.shard_id,
-                              num_shards=cfg.num_shards)
+            materialize=cfg.materialize,
+            preferred_nodes=cfg.preferred_nodes)
+        # An externally-built plan (placement policies, elastic reflow)
+        # overrides the default contiguous-strip sharding.
+        self.plan = plan or EpochPlan(uuids, seed=cfg.seed,
+                                      shard_id=cfg.shard_id,
+                                      num_shards=cfg.num_shards)
         pcfg = PrefetchConfig(batch_size=cfg.batch_size,
                               num_buffers=cfg.prefetch_buffers,
                               out_of_order=cfg.out_of_order,

@@ -9,14 +9,24 @@ connections, own AIMD processes, own ingress NIC).  Adding clients therefore
 degrades per-client throughput through genuine egress/disk contention, not
 through an ad-hoc penalty factor.
 
-``MultiHostRun`` wires up N ``CassandraLoader`` shards (disjoint contiguous
-strips of one global shuffle — see ``EpochPlan``) and drives them in
-round-robin lockstep: one batch per host per round, so every host has
+``MultiHostRun`` wires up N ``CassandraLoader`` shards — one strip of one
+global shuffle per host, carved by a placement policy (``contiguous`` or the
+replica-skewed ``token_aware``, see ``core/placement.py``) — and drives them
+in round-robin lockstep: one batch per host per round, so every host has
 consumed the same number of batches whenever control returns to the caller.
 That lockstep is what makes ``checkpoint()`` consistent: the per-shard
 ``(epoch, cursor)`` states it captures all correspond to the same global
-batch boundary, and ``start(checkpoint)`` resumes every shard from exactly
-that boundary.
+batch boundary.
+
+``start(checkpoint)`` is *elastic*: a checkpoint taken with N hosts restores
+onto M hosts for any M.  With M == N every shard resumes exactly where it
+stopped (bit-identical to the fixed-count behaviour).  With M != N the
+unfinished part of the interrupted epoch(s) is reflowed — ``compute_reflow``
+collects each old shard's undelivered tail per epoch, the placement policy
+splits every tail into M balanced strips, and those strips are installed as
+per-epoch overrides on the M fresh plans — so every sample is still
+delivered exactly once per epoch across the resize, and later epochs use the
+plain M-host sharding (identical to a run that started with M hosts).
 
 Failure injection (``inject_failure``) takes a ``SimServerNode`` dark
 mid-run; hedged requests plus the connection-pool failover path keep all
@@ -27,12 +37,15 @@ from __future__ import annotations
 
 import uuid as _uuid
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
-from .cluster import Cluster
+from .cluster import Cluster, TokenRing
 from .kvstore import KVStore
 from .loader import CassandraLoader, LoaderConfig
 from .netsim import DISK_BANDWIDTH, NIC_BANDWIDTH, VirtualClock
+from .placement import (PLACEMENT_POLICIES, global_order,
+                        preferred_node_subsets, split_strips)
+from .prefetcher import EpochPlan, compute_reflow
 
 
 @dataclass
@@ -59,8 +72,12 @@ class MultiHostConfig:
     # client count grows.
     node_egress_bandwidth: float = NIC_BANDWIDTH
     node_disk_bandwidth: float = DISK_BANDWIDTH
+    # Shard placement policy: "contiguous" (paper-faithful strips) or
+    # "token_aware" (replica-skewed strips + preferred-node routing).
+    placement: str = "contiguous"
 
-    def loader_config(self, shard_id: int) -> LoaderConfig:
+    def loader_config(self, shard_id: int,
+                      preferred_nodes: Optional[tuple] = None) -> LoaderConfig:
         return LoaderConfig(
             batch_size=self.batch_size,
             prefetch_buffers=self.prefetch_buffers,
@@ -79,7 +96,7 @@ class MultiHostConfig:
             num_shards=self.n_hosts,
             materialize=self.materialize,
             virtual_clock=True,
-        )
+            preferred_nodes=preferred_nodes)
 
 
 class MultiHostRun:
@@ -91,6 +108,9 @@ class MultiHostRun:
                  cluster: Optional[Cluster] = None) -> None:
         if cfg.n_hosts < 1:
             raise ValueError("need at least one host")
+        if cfg.placement not in PLACEMENT_POLICIES:
+            raise ValueError(f"unknown placement policy {cfg.placement!r} "
+                             f"(choose from {PLACEMENT_POLICIES})")
         self.cfg = cfg
         self.clock = clock or VirtualClock()
         self.cluster = cluster or Cluster(
@@ -98,30 +118,131 @@ class MultiHostRun:
             rf=cfg.replication_factor, seed=cfg.seed + 5,
             disk_bandwidth=cfg.node_disk_bandwidth,
             egress_bandwidth=cfg.node_egress_bandwidth)
-        self.loaders: List[CassandraLoader] = [
-            CassandraLoader(store, uuids, cfg.loader_config(i),
-                            clock=self.clock, cluster=self.cluster)
+        self._uuids = list(uuids)
+        self.preferred = preferred_node_subsets(self.cluster.node_names(),
+                                                cfg.n_hosts)
+        if cfg.placement == "token_aware":
+            strips = _steady_strips(uuids, cfg.seed, cfg.n_hosts,
+                                    "token_aware", ring=self.cluster.ring,
+                                    rf=self.cluster.rf,
+                                    preferred=self.preferred)
+            plans = [EpochPlan.from_samples(strips[i], cfg.seed, i,
+                                            cfg.n_hosts)
+                     for i in range(cfg.n_hosts)]
+            prefs = self.preferred
+        else:       # contiguous: loader carves its own strip (PR1 semantics)
+            plans = [None] * cfg.n_hosts
+            prefs = [None] * cfg.n_hosts
+        self.loaders = [
+            CassandraLoader(store, uuids, cfg.loader_config(i, prefs[i]),
+                            clock=self.clock, cluster=self.cluster,
+                            plan=plans[i])
             for i in range(cfg.n_hosts)
         ]
         self.rounds_consumed = 0
         self._started = False
 
+    def _split(self, samples: List[_uuid.UUID]) -> List[List[_uuid.UUID]]:
+        return split_strips(samples, self.cfg.n_hosts, self.cfg.placement,
+                            ring=self.cluster.ring, rf=self.cluster.rf,
+                            preferred=self.preferred)
+
     # -- lifecycle ----------------------------------------------------------
     def start(self, checkpoint: Optional[Dict] = None) -> "MultiHostRun":
-        """Start all shards, either fresh or from a coordinated checkpoint."""
+        """Start all shards: fresh, from a matching-shards checkpoint (each
+        shard resumes exactly where it stopped), or via an elastic reshard
+        (``_start_resharded``) when the host count — or any strip-defining
+        metadata like seed or placement policy — differs, so old cursors are
+        never silently applied to different strips."""
         if checkpoint is None:
             for ld in self.loaders:
                 ld.start()
-        else:
-            shards = checkpoint["shards"]
-            if len(shards) != len(self.loaders):
-                raise ValueError(
-                    f"checkpoint has {len(shards)} shards, run has "
-                    f"{len(self.loaders)} — resharding is not supported")
-            for ld, s in zip(self.loaders, shards):
+            self._started = True
+            return self
+        # every strip (old and new) is a deterministic function of the uuid
+        # list, so restoring against a different dataset would silently
+        # reflow wrong permutations — refuse instead
+        ck_size = checkpoint.get("dataset_size", len(self._uuids))
+        if ck_size != len(self._uuids):
+            raise ValueError(f"checkpoint was taken over {ck_size} samples, "
+                             f"this run has {len(self._uuids)} — not the "
+                             "same dataset")
+        if (len(checkpoint["shards"]) == len(self.loaders)
+                and self._same_strips(checkpoint)):
+            for ld, s in zip(self.loaders, checkpoint["shards"]):
+                overrides = s.get("overrides")
+                if overrides:
+                    ld.plan.install_overrides(_parse_overrides(overrides))
                 ld.start(s["epoch"], s["cursor"])
+        else:
+            self._start_resharded(checkpoint)
         self._started = True
         return self
+
+    def _same_strips(self, checkpoint: Dict) -> bool:
+        """Does the checkpointed run's strip assignment match this run's?
+        Keys missing from pre-elastic checkpoints default to what those runs
+        actually were — contiguous placement (the only pre-elastic policy;
+        must match ``_rebuild_old_plans``) and this run's seed."""
+        if (checkpoint.get("seed", self.cfg.seed) != self.cfg.seed
+                or checkpoint.get("placement",
+                                  "contiguous") != self.cfg.placement):
+            return False
+        if self.cfg.placement == "token_aware":
+            # token-aware strips also depend on the ring
+            return (checkpoint.get("node_names",
+                                   self.cluster.node_names())
+                    == self.cluster.node_names()
+                    and checkpoint.get("ring_seed", self.cluster.ring_seed)
+                    == self.cluster.ring_seed
+                    and checkpoint.get("replication_factor",
+                                       self.cfg.replication_factor)
+                    == self.cfg.replication_factor)
+        return True
+
+    def _start_resharded(self, checkpoint: Dict) -> None:
+        """Elastic N->M restore: reflow the undelivered tail of every epoch
+        at the checkpoint boundary into M strips (exactly-once preserved),
+        then fall through to plain M-host sharding for later epochs."""
+        old_plans = self._rebuild_old_plans(checkpoint)
+        positions = [(s["epoch"], s["cursor"]) for s in checkpoint["shards"]]
+        start_epoch, tails = compute_reflow(old_plans, positions)
+        for epoch, tail in sorted(tails.items()):
+            for ld, strip in zip(self.loaders, self._split(tail)):
+                ld.plan.install_overrides({epoch: strip})
+        for ld in self.loaders:
+            ld.start(start_epoch, 0)
+
+    def _rebuild_old_plans(self, checkpoint: Dict) -> List[EpochPlan]:
+        """Reconstruct the checkpointed run's shard plans from the recorded
+        (seed, placement, ring) metadata — strips are deterministic functions
+        of those, so the checkpoint itself stays small."""
+        shards = checkpoint["shards"]
+        old_n = len(shards)
+        seed = checkpoint.get("seed", self.cfg.seed)
+        policy = checkpoint.get("placement", "contiguous")
+        if policy == "token_aware":
+            n_nodes = checkpoint.get("n_nodes", self.cfg.n_nodes)
+            names = checkpoint.get("node_names",
+                                   [f"node{i}" for i in range(n_nodes)])
+            ring = TokenRing(names,
+                             seed=checkpoint.get("ring_seed", seed + 5))
+            rf = min(checkpoint.get("replication_factor",
+                                    self.cfg.replication_factor), len(names))
+            strips = _steady_strips(self._uuids, seed, old_n, "token_aware",
+                                    ring=ring, rf=rf,
+                                    preferred=preferred_node_subsets(names,
+                                                                     old_n))
+            plans = [EpochPlan.from_samples(strips[i], seed, i, old_n)
+                     for i in range(old_n)]
+        else:
+            plans = [EpochPlan(self._uuids, seed=seed, shard_id=i,
+                               num_shards=old_n) for i in range(old_n)]
+        for plan, s in zip(plans, shards):
+            overrides = s.get("overrides")
+            if overrides:
+                plan.install_overrides(_parse_overrides(overrides))
+        return plans
 
     def inject_failure(self, node: str, after: float,
                        recover_after: Optional[float] = None) -> None:
@@ -130,30 +251,57 @@ class MultiHostRun:
 
     # -- driving ------------------------------------------------------------
     def run(self, n_rounds: int, step_time: float = 0.0,
-            timeout: float = 600.0) -> Dict:
+            timeout: float = 600.0,
+            on_batch: Optional[Callable] = None) -> Dict:
         """Consume ``n_rounds`` batches on every host, round-robin lockstep.
 
         ``step_time`` models the per-step GPU compute all hosts perform in
-        parallel (one sleep per round, not per host).  Returns a report dict;
-        cumulative over repeated calls on the same run.
+        parallel (one sleep per round, not per host).  ``on_batch(host_id,
+        batch)`` is invoked for every delivered batch (tests and benchmarks
+        use it to audit delivery instead of re-deriving from logs).  Returns
+        a report dict; cumulative over repeated calls on the same run.
         """
         if not self._started:
             self.start()
         t0 = self.clock.now()
         bytes0 = [ld.pool.bytes_received for ld in self.loaders]
+        served0 = [dict(ld.pool.served_by_node) for ld in self.loaders]
+        egress0 = {name: node.egress_bytes
+                   for name, node in self.cluster.nodes.items()}
         for _ in range(n_rounds):
-            for ld in self.loaders:
-                ld.next_batch(timeout=timeout)
+            for host_id, ld in enumerate(self.loaders):
+                batch = ld.next_batch(timeout=timeout)
+                if on_batch is not None:
+                    on_batch(host_id, batch)
             if step_time > 0.0:
                 self.clock.sleep(step_time)
         self.rounds_consumed += n_rounds
-        return self._report(t0, bytes0, n_rounds)
+        return self._report(t0, bytes0, served0, egress0, n_rounds)
 
-    def _report(self, t0: float, bytes0: List[int], n_rounds: int) -> Dict:
+    def _report(self, t0: float, bytes0: List[int],
+                served0: List[Dict[str, int]], egress0: Dict[str, int],
+                n_rounds: int) -> Dict:
         elapsed = max(self.clock.now() - t0, 1e-9)
         per_client_bytes = [ld.pool.bytes_received - b0
                             for ld, b0 in zip(self.loaders, bytes0)]
         per_client_Bps = [b / elapsed for b in per_client_bytes]
+        # placement stats over this run window: how many of each host's
+        # fetches were served by one of its preferred nodes, and how the
+        # cluster's egress split across nodes.
+        local_served = total_served = 0
+        for ld, base, pref in zip(self.loaders, served0, self.preferred):
+            pref_set = frozenset(pref)
+            for name, count in ld.pool.served_by_node.items():
+                delta = count - base.get(name, 0)
+                total_served += delta
+                if name in pref_set:
+                    local_served += delta
+        egress_delta = {name: node.egress_bytes - egress0[name]
+                        for name, node in self.cluster.nodes.items()}
+        egress_total = max(sum(egress_delta.values()), 1)
+        egress_share = {name: d / egress_total
+                        for name, d in egress_delta.items()}
+        mean_share = 1.0 / max(len(egress_share), 1)
         return {
             "n_hosts": self.cfg.n_hosts,
             "rounds": n_rounds,
@@ -165,20 +313,44 @@ class MultiHostRun:
                          if per_client_Bps else 0.0),
             "failovers": sum(ld.pool.failovers for ld in self.loaders),
             "requests_sent": sum(ld.pool.requests_sent for ld in self.loaders),
+            "placement": self.cfg.placement,
+            "replica_local_hit_frac": local_served / max(total_served, 1),
+            "per_node_egress_share": egress_share,
+            # max node share / even share (1.0 = perfectly balanced egress)
+            "egress_imbalance": (max(egress_share.values()) / mean_share
+                                 if egress_share else 0.0),
             "cluster_load": self.cluster.load_report(),
         }
 
     # -- coordinated checkpointing ------------------------------------------
     def checkpoint(self) -> Dict:
         """Consistent snapshot: all shards are at the same batch boundary
-        (guaranteed by the round-robin driver)."""
+        (guaranteed by the round-robin driver).  Restorable onto any host
+        count — the recorded seed/placement/topology let the restore rebuild
+        the old strips, and any still-pending reshard-transition overrides
+        travel with their shard."""
         consumed = {ld.prefetcher.consumed for ld in self.loaders}
         if len(consumed) > 1:
             raise RuntimeError(f"shards out of lockstep: consumed={consumed}")
+        shards = []
+        for ld in self.loaders:
+            s = dict(ld.state())
+            pending = ld.plan.pending_overrides(s["epoch"])
+            if pending:
+                s["overrides"] = {int(e): [str(u) for u in samples]
+                                  for e, samples in pending.items()}
+            shards.append(s)
         return {
             "rounds": self.rounds_consumed,
             "num_shards": self.cfg.n_hosts,
-            "shards": [ld.state() for ld in self.loaders],
+            "dataset_size": len(self._uuids),
+            "seed": self.cfg.seed,
+            "placement": self.cfg.placement,
+            "n_nodes": self.cfg.n_nodes,
+            "node_names": self.cluster.node_names(),
+            "ring_seed": self.cluster.ring_seed,
+            "replication_factor": self.cfg.replication_factor,
+            "shards": shards,
         }
 
     # -- introspection -------------------------------------------------------
@@ -188,7 +360,25 @@ class MultiHostRun:
     def describe(self) -> str:
         return (f"{self.cfg.n_hosts} hosts x B={self.cfg.batch_size} "
                 f"-> {self.cfg.n_nodes}-node {self.cfg.backend} "
-                f"(rf={self.cfg.replication_factor}, {self.cfg.route} route)")
+                f"(rf={self.cfg.replication_factor}, {self.cfg.route} route, "
+                f"{self.cfg.placement} placement)")
+
+
+def _steady_strips(uuids: List[_uuid.UUID], seed: int, n_hosts: int,
+                   policy: str, ring=None, rf: int = 1,
+                   preferred=None) -> List[List[_uuid.UUID]]:
+    """One strip per host of the global shuffle, per placement policy — the
+    single strip-builder both fresh runs and checkpoint reconstruction use,
+    so the two can never drift."""
+    return split_strips(global_order(uuids, seed, n_hosts), n_hosts, policy,
+                        ring=ring, rf=rf, preferred=preferred)
+
+
+def _parse_overrides(overrides: Dict) -> Dict[int, List[_uuid.UUID]]:
+    """Checkpoint override lists back to UUID objects (keys may be str)."""
+    return {int(e): [u if isinstance(u, _uuid.UUID) else _uuid.UUID(u)
+                     for u in samples]
+            for e, samples in overrides.items()}
 
 
 __all__ = ["MultiHostConfig", "MultiHostRun"]

@@ -1,0 +1,148 @@
+"""Shard placement policies: which keys each training host owns.
+
+The multi-host coordinator carves one global shuffle of the dataset into one
+strip per host.  *How* that carving is done is a placement policy:
+
+``contiguous``
+    Balanced contiguous strips of the shuffled key list — the paper-faithful
+    default.  Every host's strip touches every storage node roughly equally,
+    so every host contends with every other host on every node's egress NIC.
+
+``token_aware``
+    Replica-skewed strips.  Each host is given a *preferred subset* of the
+    storage nodes (round-robin over the ring, see
+    :func:`preferred_node_subsets`) and greedily receives the keys whose
+    replica set (``TokenRing.replicas``) intersects that subset.  Strips stay
+    exactly balanced (sizes differ by at most one), so sharding semantics —
+    disjoint, jointly covering, exactly once per epoch — are identical to
+    ``contiguous``; only *which* host owns *which* keys changes.  Each host's
+    traffic then concentrates on its preferred nodes, which is what keeps
+    client scaling from turning into all-to-all egress contention
+    (cf. Krichevsky et al. on locality-blind shard assignment).
+
+The module is deliberately dependency-light: a "ring" is anything with a
+``replicas(key, rf) -> List[str]`` method.
+"""
+
+from __future__ import annotations
+
+import uuid as _uuid
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+PLACEMENT_POLICIES = ("contiguous", "token_aware")
+
+
+def global_order(uuids: Sequence[_uuid.UUID], seed: int,
+                 num_shards: int) -> List[_uuid.UUID]:
+    """The shared global shuffle every host computes identically.
+
+    Seeded by ``(seed, num_shards)`` — the same stream ``EpochPlan`` has
+    always used, so contiguous strips of this order are byte-identical to the
+    plan's own internal sharding.
+    """
+    n = len(uuids)
+    order = np.random.default_rng((seed, num_shards)).permutation(n)
+    return [uuids[i] for i in order]
+
+
+def strip_bounds(n: int, num_shards: int) -> List[Tuple[int, int]]:
+    """Balanced ``[lo, hi)`` bounds: sizes differ by at most one."""
+    return [((j * n) // num_shards, ((j + 1) * n) // num_shards)
+            for j in range(num_shards)]
+
+
+def split_contiguous(samples: Sequence, num_shards: int) -> List[List]:
+    return [list(samples[lo:hi]) for lo, hi in strip_bounds(len(samples),
+                                                            num_shards)]
+
+
+def preferred_node_subsets(node_names: Sequence[str],
+                           n_hosts: int) -> List[Tuple[str, ...]]:
+    """Round-robin host -> storage-node preference map.
+
+    With fewer hosts than nodes each host prefers a disjoint stripe of
+    nodes; with more hosts than nodes, hosts wrap around and share.  Either
+    way every node is preferred by someone.  Aggregate per-node egress is
+    even when the host count divides (or is a multiple of) the node count;
+    otherwise subsets have unequal sizes and a host preferring two nodes
+    spreads one strip's worth of traffic across both, so single-node
+    subsets can carry up to 2x the egress — visible in the run report's
+    ``egress_imbalance``.
+    """
+    n = len(node_names)
+    if n == 0 or n_hosts < 1:
+        raise ValueError(f"bad preference spec: {n} nodes, {n_hosts} hosts")
+    if n_hosts <= n:
+        return [tuple(node_names[k] for k in range(n) if k % n_hosts == j)
+                for j in range(n_hosts)]
+    return [(node_names[j % n],) for j in range(n_hosts)]
+
+
+def split_token_aware(samples: Sequence[_uuid.UUID], num_shards: int, ring,
+                      rf: int,
+                      preferred: Sequence[Sequence[str]]) -> List[List]:
+    """Greedy replica-skewed split with strict balance.
+
+    Pass 1 hands each key (in the given deterministic order) to the
+    least-filled host — among those with remaining capacity — whose preferred
+    nodes host a replica of the key.  Pass 2 distributes the leftovers to
+    whoever still has room.  The result is a partition with the same balanced
+    sizes as :func:`split_contiguous`, but replica-local wherever the ring
+    allows it.
+    """
+    if len(preferred) != num_shards:
+        raise ValueError(f"{len(preferred)} preference sets for "
+                         f"{num_shards} shards")
+    caps = [hi - lo for lo, hi in strip_bounds(len(samples), num_shards)]
+    pref_sets = [frozenset(p) for p in preferred]
+    strips: List[List] = [[] for _ in range(num_shards)]
+    leftovers: List = []
+    for u in samples:
+        replicas = frozenset(ring.replicas(u, rf))
+        local = [j for j in range(num_shards)
+                 if len(strips[j]) < caps[j] and replicas & pref_sets[j]]
+        if local:
+            j = min(local, key=lambda j: (len(strips[j]), j))
+            strips[j].append(u)
+        else:
+            leftovers.append(u)
+    for u in leftovers:
+        j = min((j for j in range(num_shards) if len(strips[j]) < caps[j]),
+                key=lambda j: (len(strips[j]), j))
+        strips[j].append(u)
+    return strips
+
+
+def split_strips(samples: Sequence[_uuid.UUID], num_shards: int,
+                 policy: str = "contiguous", ring=None, rf: int = 1,
+                 preferred: Optional[Sequence[Sequence[str]]] = None
+                 ) -> List[List]:
+    """Split ``samples`` into ``num_shards`` balanced strips per ``policy``."""
+    if policy == "contiguous":
+        return split_contiguous(samples, num_shards)
+    if policy == "token_aware":
+        if ring is None or preferred is None:
+            raise ValueError("token_aware placement needs a ring and a "
+                             "preference map")
+        return split_token_aware(samples, num_shards, ring, rf, preferred)
+    raise ValueError(f"unknown placement policy {policy!r} "
+                     f"(choose from {PLACEMENT_POLICIES})")
+
+
+def replica_local_fraction(strips: Sequence[Sequence[_uuid.UUID]], ring,
+                           rf: int,
+                           preferred: Sequence[Sequence[str]]) -> float:
+    """Fraction of keys whose owning host prefers one of their replicas."""
+    total = sum(len(s) for s in strips)
+    if total == 0:
+        return 0.0
+    hits = sum(1 for j, strip in enumerate(strips) for u in strip
+               if frozenset(ring.replicas(u, rf)) & frozenset(preferred[j]))
+    return hits / total
+
+
+__all__ = ["PLACEMENT_POLICIES", "global_order", "strip_bounds",
+           "split_contiguous", "split_token_aware", "split_strips",
+           "preferred_node_subsets", "replica_local_fraction"]

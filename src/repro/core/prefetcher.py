@@ -28,6 +28,7 @@ import numpy as np
 from .batch_loader import AssembledBatch, BatchAssembler, BatchRequest
 from .connection import ConnectionPool, FetchResult
 from .netsim import Clock
+from .placement import global_order, split_contiguous
 from .stats import LoaderStats
 
 
@@ -49,6 +50,13 @@ class EpochPlan:
     N shards are disjoint, jointly cover the dataset, and differ in size by
     at most one sample when N does not divide the dataset.  Each shard then
     reshuffles *its own strip* per epoch.
+
+    A plan can additionally carry per-epoch *overrides* — fixed sample lists
+    that replace the shuffled strip for specific epochs.  Overrides are how
+    an elastic N->M restart reflows the unfinished part of the interrupted
+    epoch(s) onto M new hosts (see :func:`compute_reflow`): the transition
+    epochs are pinned to explicit strips of the leftover samples, and every
+    later epoch falls back to the plan's own strip.
     """
 
     def __init__(self, uuids: List[_uuid.UUID], seed: int = 0,
@@ -58,21 +66,72 @@ class EpochPlan:
         if num_shards > 1:
             # per-host shard of the global UUID list (multi-host loading):
             # contiguous strips of the *shuffled* list stay unbiased.
-            n = len(uuids)
-            order = np.random.default_rng((seed, num_shards)).permutation(n)
-            lo = (shard_id * n) // num_shards
-            hi = ((shard_id + 1) * n) // num_shards
-            self._uuids = [uuids[i] for i in order[lo:hi]]
+            shuffled = global_order(uuids, seed, num_shards)
+            self._uuids = split_contiguous(shuffled, num_shards)[shard_id]
         else:
             self._uuids = list(uuids)
         self._seed = seed
         self.shard_id = shard_id
         self.num_shards = num_shards
+        self._overrides: Dict[int, List[_uuid.UUID]] = {}
+
+    @classmethod
+    def from_samples(cls, samples: List[_uuid.UUID], seed: int = 0,
+                     shard_id: int = 0, num_shards: int = 1) -> "EpochPlan":
+        """A shard whose strip was assigned externally (placement policies,
+        strip reflow) instead of carved from the global shuffle here."""
+        plan = cls(list(samples), seed=seed)
+        plan.shard_id = shard_id
+        plan.num_shards = num_shards
+        return plan
 
     def __len__(self) -> int:
         return len(self._uuids)
 
+    # -- per-epoch overrides (elastic-reshard transitions) ------------------
+    def install_overrides(self,
+                          overrides: Dict[int, List[_uuid.UUID]]) -> None:
+        """Pin specific epochs to fixed sample lists."""
+        for e, samples in overrides.items():
+            self._overrides[int(e)] = list(samples)
+
+    def pending_overrides(self, from_epoch: int) -> Dict[int, List[_uuid.UUID]]:
+        """Overrides not yet fully consumed at ``from_epoch`` — the part a
+        checkpoint must carry for the restore to replay the transition."""
+        return {e: list(s) for e, s in self._overrides.items()
+                if e >= from_epoch}
+
+    def epoch_length(self, epoch: int) -> int:
+        ov = self._overrides.get(epoch)
+        return len(self._uuids) if ov is None else len(ov)
+
+    def advance(self, epoch: int, cursor: int, n_samples: int = 0) -> tuple:
+        """Normalize ``(epoch, cursor + n_samples)`` against the per-epoch
+        lengths: a position at/past the end of an epoch rolls into later
+        epochs.  This is the shard's odometer — exact for override epochs of
+        any length, constant-time once past the last override."""
+        if cursor < 0:
+            raise ValueError(f"negative cursor {cursor}")
+        c = cursor + n_samples
+        e = epoch
+        last_override = max(self._overrides, default=-1)
+        while e <= last_override:
+            length = self.epoch_length(e)
+            if c < length:
+                return e, c
+            c -= length
+            e += 1
+        n = len(self._uuids)
+        if n == 0:
+            raise ValueError("EpochPlan shard is empty — more shards than "
+                             "samples (or an empty dataset)")
+        return e + c // n, c % n
+
+    # -- per-epoch delivery order -------------------------------------------
     def permutation(self, epoch: int) -> List[_uuid.UUID]:
+        ov = self._overrides.get(epoch)
+        if ov is not None:
+            return list(ov)
         rng = np.random.default_rng((self._seed, epoch))
         order = rng.permutation(len(self._uuids))
         return [self._uuids[i] for i in order]
@@ -86,6 +145,43 @@ class EpochPlan:
                 yield e, perm[i]
             cursor = 0
             e += 1
+
+
+def compute_reflow(old_plans: List[EpochPlan],
+                   old_positions: List[tuple]) -> tuple:
+    """Per-epoch leftovers at a coordinated N-host checkpoint boundary.
+
+    ``old_positions`` holds one ``(epoch, cursor)`` per old shard.  Uneven
+    strips drift apart in epoch number over time, so the boundary spans the
+    epochs between the slowest and the fastest shard; for each such epoch
+    this returns the samples *not yet delivered*, concatenated in shard
+    order.  Splitting every epoch's tail into M balanced strips (see
+    ``repro.core.placement.split_strips``) and installing them as overrides
+    on M fresh plans yields an elastic N->M restart that still delivers
+    every sample exactly once per epoch.
+
+    Returns ``(start_epoch, {epoch: [uuid, ...]})`` where ``start_epoch`` is
+    the slowest shard's epoch — the position all new shards restart from.
+    """
+    if len(old_plans) != len(old_positions) or not old_plans:
+        raise ValueError("need one (epoch, cursor) position per old plan")
+    epochs = [e for e, _ in old_positions]
+    e_start, e_end = min(epochs), max(epochs)
+    # A prior reshard may have pinned overrides *beyond* every shard's
+    # current epoch (multi-epoch transitions); those epochs are still
+    # partial globally, so the reflow window must reach them or the new
+    # plans would deliver them as full plain epochs (duplicates).
+    for plan, (e_i, _) in zip(old_plans, old_positions):
+        pending = plan.pending_overrides(e_i)
+        if pending:
+            e_end = max(e_end, max(pending))
+    tails: Dict[int, List[_uuid.UUID]] = {e: [] for e in
+                                          range(e_start, e_end + 1)}
+    for plan, (e_i, c_i) in zip(old_plans, old_positions):
+        for e in range(e_i, e_end + 1):
+            perm = plan.permutation(e)
+            tails[e].extend(perm[c_i:] if e == e_i else perm)
+    return e_start, tails
 
 
 class _PrefetcherBase:
@@ -116,22 +212,15 @@ class _PrefetcherBase:
     def _set_origin(self, epoch: int, cursor: int) -> None:
         """Normalize a restart position: a cursor at/past the end of this
         shard's epoch (possible when shards divide unevenly and a global
-        batch count is mapped onto each shard) rolls into later epochs."""
-        n = len(self.plan)
-        if n == 0:
-            raise ValueError("EpochPlan shard is empty — more shards than "
-                             "samples (or an empty dataset)")
-        if cursor < 0:
-            raise ValueError(f"negative cursor {cursor}")
-        self._epoch0 = epoch + cursor // n
-        self._cursor0 = cursor % n
+        batch count is mapped onto each shard) rolls into later epochs —
+        honouring per-epoch override lengths during reshard transitions."""
+        self._epoch0, self._cursor0 = self.plan.advance(epoch, cursor)
 
     def state(self) -> dict:
         """Loader position for fault-tolerant restart (batch granularity)."""
-        total = self.consumed * self.cfg.batch_size + self._cursor0
-        n = len(self.plan)
-        return {"epoch": self._epoch0 + total // n, "cursor": total % n,
-                "consumed": self.consumed}
+        epoch, cursor = self.plan.advance(
+            self._epoch0, self._cursor0, self.consumed * self.cfg.batch_size)
+        return {"epoch": epoch, "cursor": cursor, "consumed": self.consumed}
 
     def describe(self) -> str:
         mode = "OOO" if self.cfg.out_of_order else "in-order"
@@ -260,5 +349,5 @@ def make_prefetcher(clock: Clock, pool: ConnectionPool, plan: EpochPlan,
     return cls(clock, pool, plan, cfg, real_copy=real_copy)
 
 
-__all__ = ["PrefetchConfig", "EpochPlan", "InOrderPrefetcher",
-           "OutOfOrderPrefetcher", "make_prefetcher"]
+__all__ = ["PrefetchConfig", "EpochPlan", "compute_reflow",
+           "InOrderPrefetcher", "OutOfOrderPrefetcher", "make_prefetcher"]

@@ -208,13 +208,195 @@ def test_coordinated_checkpoint_consistent_and_resumable(store_uuids):
     assert all(b > 0 for b in rep["per_client_Bps"])
 
 
-def test_checkpoint_shard_count_mismatch_rejected(store_uuids):
+# ---------------------------------------------------------------------------
+# Elastic N -> M resharding + placement policies
+# ---------------------------------------------------------------------------
+
+def _fast_cfg(n_hosts, **kw):
+    """In-order, low-latency, uncontended: delivery order == plan order, so
+    tests can audit exact delivery instead of re-deriving from logs."""
+    fast = dict(node_egress_bandwidth=6.25e9, route="low", hedge_after=None,
+                out_of_order=False, batch_size=100)
+    fast.update(kw)
+    return _mh_cfg(n_hosts, **fast)
+
+
+def _collector(delivered):
+    def on_batch(host_id, batch):
+        delivered.setdefault(batch.epoch, []).extend(
+            str(u) for u in batch.uuids)
+    return on_batch
+
+
+def test_checkpoint_roundtrip_equivalence_same_n(store_uuids):
+    """K rounds + checkpoint + restore with the same N delivers exactly the
+    same uuid stream (per host, in order) as an uninterrupted run, and the
+    per-shard cursors match at every boundary."""
     store, uuids = store_uuids
-    cfg = _mh_cfg(2, node_egress_bandwidth=6.25e9, route="low")
-    run = MultiHostRun(store, uuids, cfg).start()
-    run.run(2)
+    small = uuids[:1500]
+    cfg = _fast_cfg(3)
+
+    unbroken: dict = {}
+    run = MultiHostRun(store, small, cfg).start()
+    run.run(3, on_batch=_collector(unbroken))
     ck = run.checkpoint()
-    other = MultiHostRun(store, uuids, _mh_cfg(3, node_egress_bandwidth=6.25e9,
-                                               route="low"))
+    continued: dict = {}
+    run.run(4, on_batch=_collector(continued))
+    final_states = [{k: s[k] for k in ("epoch", "cursor")}
+                    for s in run.checkpoint()["shards"]]
+
+    resumed: dict = {}
+    restore = MultiHostRun(store, small, cfg).start(ck)
+    restore.run(4, on_batch=_collector(resumed))
+    assert resumed == continued               # same multiset AND same order
+    assert [{k: s[k] for k in ("epoch", "cursor")}
+            for s in restore.checkpoint()["shards"]] == final_states
+
+
+@pytest.mark.parametrize("old_n,new_n", [(3, 2), (2, 4)])
+def test_elastic_restore_exactly_once_per_epoch(store_uuids, old_n, new_n):
+    """An N-host checkpoint restored onto M hosts still delivers the
+    interrupted epoch's remaining samples exactly once, then continues with
+    plain M-host epochs."""
+    store, uuids = store_uuids
+    small = uuids[:1200]                      # strips: 400x3 or 600x2
+    delivered: dict = {}
+
+    run = MultiHostRun(store, small, _fast_cfg(old_n)).start()
+    run.run(2, on_batch=_collector(delivered))           # part of epoch 0
+    ck = run.checkpoint()
+
+    restore = MultiHostRun(store, small, _fast_cfg(new_n)).start(ck)
+    remaining = 1200 - old_n * 2 * 100
+    rounds = remaining // (new_n * 100)                  # finish epoch 0...
+    restore.run(rounds + 1200 // (new_n * 100),          # ...plus epoch 1
+                on_batch=_collector(delivered))
+    universe = {str(u) for u in small}
+    for epoch in (0, 1):
+        assert len(delivered[epoch]) == 1200
+        assert set(delivered[epoch]) == universe         # exactly once each
+
+
+def test_elastic_restore_composes_mid_transition(store_uuids):
+    """4 -> 2 -> 3 hosts, with the second checkpoint taken *inside* the
+    first resize's transition epoch: the pending overrides travel in the
+    checkpoint, so reshards compose without losing exactly-once."""
+    store, uuids = store_uuids
+    small = uuids[:1200]
+    delivered: dict = {}
+    run4 = MultiHostRun(store, small, _fast_cfg(4)).start()
+    run4.run(1, on_batch=_collector(delivered))          # 400 of epoch 0
+    run2 = MultiHostRun(store, small, _fast_cfg(2)).start(run4.checkpoint())
+    run2.run(1, on_batch=_collector(delivered))          # 200 more, mid-reflow
+    ck = run2.checkpoint()
+    assert any("overrides" in s for s in ck["shards"])   # transition pending
+
+    run3 = MultiHostRun(store, small, _fast_cfg(3)).start(ck)
+    run3.run(2 + 4, on_batch=_collector(delivered))      # rest of e0 + all e1
+    universe = {str(u) for u in small}
+    for epoch in (0, 1):
+        assert len(delivered[epoch]) == 1200
+        assert set(delivered[epoch]) == universe
+
+
+def test_elastic_restore_survives_node_failure_during_resize(store_uuids):
+    """A node dying mid-resize must not break the reflowed shards (hedging +
+    failover re-route; exactly-once is a plan property, not a routing one)."""
+    store, uuids = store_uuids
+    small = uuids[:1200]
+    delivered: dict = {}
+    run = MultiHostRun(store, small, _fast_cfg(4)).start()
+    run.run(1, on_batch=_collector(delivered))
+    ck = run.checkpoint()
+
+    cfg = _fast_cfg(2, hedge_after=1.0)
+    restore = MultiHostRun(store, small, cfg).start(ck)
+    restore.inject_failure("node3", after=0.0)
+    restore.run(4, on_batch=_collector(delivered))       # 800 more of epoch 0
+    assert len(delivered[0]) == len(set(delivered[0])) == 1200
+    assert restore.cluster.nodes["node3"].down
+
+
+@pytest.mark.parametrize("mismatch,legacy",
+                         [({"placement": "token_aware"}, False),
+                          ({"placement": "token_aware"}, True),
+                          ({"seed": 14}, False)])
+def test_same_count_restore_with_different_strips_reshards(store_uuids,
+                                                           mismatch, legacy):
+    """Same host count but different strip-defining metadata (placement
+    policy or seed): blindly resuming old cursors on new strips would skip
+    and duplicate samples, so these restores must reflow too — including a
+    legacy checkpoint with no metadata keys at all, whose missing placement
+    means 'contiguous', not 'whatever the restoring run uses' (regression)."""
+    store, uuids = store_uuids
+    small = uuids[:1200]
+    delivered: dict = {}
+    run = MultiHostRun(store, small, _fast_cfg(2)).start()
+    run.run(2, on_batch=_collector(delivered))           # 400 of epoch 0
+    ck = run.checkpoint()
+    if legacy:
+        ck = {"rounds": ck["rounds"], "num_shards": ck["num_shards"],
+              "shards": [{k: s[k] for k in ("epoch", "cursor", "consumed")}
+                         for s in ck["shards"]]}
+
+    other = MultiHostRun(store, small, _fast_cfg(2, **mismatch)).start(ck)
+    other.run(4 + 6, on_batch=_collector(delivered))     # rest of e0 + all e1
+    universe = {str(u) for u in small}
+    for epoch in (0, 1):
+        assert len(delivered[epoch]) == 1200
+        assert set(delivered[epoch]) == universe
+
+
+def test_pr1_style_checkpoint_still_restores(store_uuids):
+    """Checkpoints predating the elastic/placement fields (no seed/placement/
+    overrides keys) restore bit-identically on the same host count."""
+    store, uuids = store_uuids
+    cfg = _fast_cfg(3)
+    run = MultiHostRun(store, uuids[:1500], cfg).start()
+    run.run(3)
+    ck = run.checkpoint()
+    legacy = {"rounds": ck["rounds"], "num_shards": ck["num_shards"],
+              "shards": [{k: s[k] for k in ("epoch", "cursor", "consumed")}
+                         for s in ck["shards"]]}
+    restored = MultiHostRun(store, uuids[:1500], cfg).start(legacy)
+    for ld, s in zip(restored.loaders, ck["shards"]):
+        assert ld.state() == {"epoch": s["epoch"], "cursor": s["cursor"],
+                              "consumed": 0}
+
+
+def test_token_aware_placement_beats_contiguous_locality(store_uuids):
+    """On a 4-node rf=2 cluster, token-aware placement + preferred routing
+    serves nearly every fetch replica-locally; contiguous sits near the
+    combinatorial baseline.  The report carries the stats directly."""
+    store, uuids = store_uuids
+    reports = {}
+    for policy in ("contiguous", "token_aware"):
+        rep = MultiHostRun(store, uuids[:4000],
+                           _fast_cfg(4, placement=policy)).run(4)
+        assert rep["placement"] == policy
+        assert sum(rep["per_node_egress_share"].values()) == pytest.approx(1.0)
+        assert rep["egress_imbalance"] >= 1.0
+        reports[policy] = rep
+    assert reports["token_aware"]["replica_local_hit_frac"] > 0.9
+    assert (reports["token_aware"]["replica_local_hit_frac"]
+            > reports["contiguous"]["replica_local_hit_frac"] + 0.2)
+
+
+def test_rejects_unknown_placement_policy(store_uuids):
+    store, uuids = store_uuids
     with pytest.raises(ValueError):
-        other.start(ck)
+        MultiHostRun(store, uuids[:100], _mh_cfg(2, placement="random"))
+
+
+def test_restore_against_different_dataset_rejected(store_uuids):
+    """Strips are deterministic functions of the uuid list, so a checkpoint
+    restored over a different dataset would silently reflow wrong
+    permutations — it must refuse instead (for any target host count)."""
+    store, uuids = store_uuids
+    run = MultiHostRun(store, uuids[:1200], _fast_cfg(2)).start()
+    run.run(1)
+    ck = run.checkpoint()
+    assert ck["dataset_size"] == 1200
+    for n_hosts in (2, 3):
+        with pytest.raises(ValueError):
+            MultiHostRun(store, uuids[:1000], _fast_cfg(n_hosts)).start(ck)

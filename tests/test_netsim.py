@@ -81,6 +81,32 @@ def test_tier_table_is_monotone_in_latency():
     assert TIERS["low"].rtt < TIERS["med"].rtt < TIERS["high"].rtt
 
 
+def test_multihost_sim_determinism():
+    """Two ``MultiHostRun`` sims with the same seed produce byte-identical
+    reports — the whole simulation runs on the ``VirtualClock``, so any
+    wall-clock leakage (time.time() creeping into scheduling or stats)
+    would show up as float drift here."""
+    from repro.core import KVStore, MultiHostConfig, MultiHostRun
+    from repro.data.datasets import SyntheticImageDataset, ingest
+
+    def go():
+        store = KVStore()
+        uuids = ingest(store, SyntheticImageDataset(n_samples=3000, seed=3))
+        cfg = MultiHostConfig(n_hosts=2, batch_size=64, prefetch_buffers=2,
+                              io_threads=2, route="low", n_nodes=4,
+                              replication_factor=2, hedge_after=0.5, seed=9,
+                              node_egress_bandwidth=2e8,
+                              placement="token_aware")
+        run = MultiHostRun(store, uuids, cfg)
+        rep = run.run(4)
+        rep["checkpoint"] = run.checkpoint()
+        return rep
+
+    r1, r2 = go(), go()
+    assert r1 == r2                    # every float, exactly
+    assert repr(r1) == repr(r2)        # and byte-identical serialized
+
+
 def test_deterministic_replay():
     """Same seed => byte-identical event trace (required for benchmarks)."""
 

@@ -1,0 +1,258 @@
+"""Property-based invariants for elastic N->M strip reflow and placement.
+
+The loader-landscape lesson (Ofeidis et al.): loaders silently diverge under
+restart.  These properties pin the contract down: for arbitrary dataset
+size, seed, host counts and checkpoint position, the reflowed strips are
+pairwise disjoint, balanced, and — together with what was delivered before
+the checkpoint — cover every uuid exactly once per epoch.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster import TokenRing
+from repro.core.kvstore import make_uuid
+from repro.core.placement import (global_order, preferred_node_subsets,
+                                  replica_local_fraction, split_contiguous,
+                                  split_strips)
+from repro.core.prefetcher import EpochPlan, compute_reflow
+
+N_NODES = 4
+RF = 2
+
+
+def _uuids(n, seed=7):
+    rng = np.random.default_rng(seed)
+    return [make_uuid(rng) for _ in range(n)]
+
+
+def _ring(seed=5):
+    return TokenRing([f"node{i}" for i in range(N_NODES)], seed=seed)
+
+
+def _reshard(uuids, seed, old_n, new_n, consumed_each, token_aware):
+    """The same reflow pipeline MultiHostRun._start_resharded runs: old
+    plans at a lockstep boundary -> per-epoch tails -> M new plans with
+    transition overrides.  Returns (old_plans, positions, new_plans,
+    start_epoch, last_transition_epoch)."""
+    old_plans = [EpochPlan(uuids, seed=seed, shard_id=i, num_shards=old_n)
+                 for i in range(old_n)]
+    positions = [p.advance(0, 0, consumed_each) for p in old_plans]
+    start_epoch, tails = compute_reflow(old_plans, positions)
+    if token_aware:
+        ring, pref = _ring(), preferred_node_subsets(
+            [f"node{i}" for i in range(N_NODES)], new_n)
+        split = lambda s: split_strips(s, new_n, "token_aware", ring=ring,
+                                       rf=RF, preferred=pref)
+        steady = split(global_order(uuids, seed, new_n))
+        new_plans = [EpochPlan.from_samples(steady[j], seed, j, new_n)
+                     for j in range(new_n)]
+    else:
+        split = lambda s: split_strips(s, new_n)
+        new_plans = [EpochPlan(uuids, seed=seed, shard_id=j, num_shards=new_n)
+                     for j in range(new_n)]
+    for epoch, tail in tails.items():
+        for plan, strip in zip(new_plans, split(tail)):
+            plan.install_overrides({epoch: strip})
+    return old_plans, positions, new_plans, start_epoch, max(tails)
+
+
+def _delivered_before(plan, position, epoch):
+    """What one old shard already delivered for ``epoch`` pre-checkpoint."""
+    e_i, c_i = position
+    if epoch < e_i:
+        return plan.permutation(epoch)       # epoch fully delivered
+    if epoch == e_i:
+        return plan.permutation(epoch)[:c_i]
+    return []
+
+
+@given(n=st.integers(1, 90), old_n=st.integers(1, 8), new_n=st.integers(1, 8),
+       seed=st.integers(0, 99), consumed=st.integers(0, 150),
+       token_aware=st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_reflow_exactly_once_per_epoch(n, old_n, new_n, seed, consumed,
+                                       token_aware):
+    """Pre-checkpoint deliveries + post-reshard strips == every uuid exactly
+    once, for every epoch touched by the transition and the first steady
+    epoch after it; strips are pairwise disjoint and balanced."""
+    old_n, new_n = min(old_n, n), min(new_n, n)   # no empty steady shards
+    uuids = _uuids(n)
+    universe = {str(u) for u in uuids}
+    old_plans, positions, new_plans, e_start, e_last = _reshard(
+        uuids, seed, old_n, new_n, consumed, token_aware)
+
+    for epoch in range(e_start, e_last + 2):      # transition + one steady
+        pre = [u for plan, pos in zip(old_plans, positions)
+               for u in _delivered_before(plan, pos, epoch)]
+        post_strips = [plan.permutation(epoch) for plan in new_plans]
+        post = [u for strip in post_strips for u in strip]
+        flat = [str(u) for u in pre + post]
+        assert len(flat) == n                     # exactly once...
+        assert set(flat) == universe              # ...and jointly covering
+        # pairwise disjoint post strips (per epoch)
+        post_flat = [str(u) for u in post]
+        assert len(post_flat) == len(set(post_flat))
+        # balanced reflow strips: remainders spread, sizes differ by <= 1
+        sizes = sorted(len(s) for s in post_strips)
+        assert sizes[-1] - sizes[0] <= 1
+
+
+def test_reflow_composes_across_multi_epoch_transition():
+    """Resharding twice, with the second checkpoint taken before the fastest
+    shard's transition epoch: pending overrides *beyond* every shard's
+    current epoch must extend the reflow window, or the partially-delivered
+    later epoch would be re-delivered in full (regression: duplicates)."""
+    uuids = _uuids(7)                       # 2 hosts -> strips of 3 and 4
+    universe = {str(u) for u in uuids}
+    old = [EpochPlan(uuids, seed=0, shard_id=i, num_shards=2)
+           for i in range(2)]
+    positions = [p.advance(0, 0, 14) for p in old]
+    assert sorted(e for e, _ in positions) == [3, 4]    # epochs drifted apart
+
+    e_mid, tails = compute_reflow(old, positions)
+    mid = [EpochPlan(uuids, seed=0, shard_id=j, num_shards=2)
+           for j in range(2)]
+    for e, tail in tails.items():
+        for plan, strip in zip(mid, split_strips(tail, 2)):
+            plan.install_overrides({e: strip})
+    pos_mid = [(e_mid, 0)] * 2              # immediate re-reshard: positions
+    # sit at epoch 3, but epoch-4 overrides are still pending
+    e2, tails2 = compute_reflow(mid, pos_mid)
+    assert max(tails2) == 4                 # window reaches the pending epoch
+    final = [EpochPlan(uuids, seed=0, shard_id=j, num_shards=3)
+             for j in range(3)]
+    for e, tail in tails2.items():
+        for plan, strip in zip(final, split_strips(tail, 3)):
+            plan.install_overrides({e: strip})
+
+    for epoch in range(e2, max(tails2) + 2):
+        pre1 = [u for p, pos in zip(old, positions)
+                for u in _delivered_before(p, pos, epoch)]
+        pre2 = [u for p, pos in zip(mid, pos_mid)
+                for u in _delivered_before(p, pos, epoch)]
+        post = [u for p in final for u in p.permutation(epoch)]
+        flat = [str(u) for u in pre1 + pre2 + post]
+        assert len(flat) == 7
+        assert set(flat) == universe
+
+
+@given(n=st.integers(2, 90), old_n=st.integers(1, 8), new_n=st.integers(1, 8),
+       seed=st.integers(0, 99), consumed=st.integers(0, 150))
+@settings(max_examples=25, deadline=None)
+def test_reflow_converges_to_fresh_m_host_sharding(n, old_n, new_n, seed,
+                                                   consumed):
+    """Past the transition, a resharded run is indistinguishable from a run
+    that started with M hosts: identical per-epoch permutations."""
+    old_n, new_n = min(old_n, n), min(new_n, n)
+    uuids = _uuids(n)
+    _, _, new_plans, _, e_last = _reshard(uuids, seed, old_n, new_n,
+                                          consumed, token_aware=False)
+    fresh = [EpochPlan(uuids, seed=seed, shard_id=j, num_shards=new_n)
+             for j in range(new_n)]
+    for epoch in (e_last + 1, e_last + 3):
+        for reflowed, plain in zip(new_plans, fresh):
+            assert reflowed.permutation(epoch) == plain.permutation(epoch)
+
+
+@given(n=st.integers(1, 200), num_shards=st.integers(1, 9),
+       consumed=st.integers(0, 500), extra=st.integers(0, 99))
+@settings(max_examples=30, deadline=None)
+def test_advance_odometer_matches_iteration(n, num_shards, consumed, extra):
+    """plan.advance == naively walking the (epoch, cursor) odometer, with
+    and without transition overrides of a different length."""
+    num_shards = min(num_shards, n)
+    uuids = _uuids(n)
+    plan = EpochPlan(uuids, seed=3, shard_id=0, num_shards=num_shards)
+    # pin epoch 0 to a shorter override (a reflow transition strip)
+    override = plan.permutation(1)[:max(len(plan) // 2, 1)]
+    plan.install_overrides({0: override})
+    e, c = 0, 0
+    for _ in range(consumed):
+        c += 1
+        while c >= plan.epoch_length(e):
+            c -= plan.epoch_length(e)
+            e += 1
+    assert plan.advance(0, 0, consumed) == (e, c)
+    # advancing from a mid-stream position agrees too
+    assert plan.advance(e, c, extra) == plan.advance(0, 0, consumed + extra)
+
+
+def test_epoch_overrides_round_trip_and_expire():
+    uuids = _uuids(40)
+    plan = EpochPlan(uuids, seed=1, shard_id=0, num_shards=2)
+    strip = uuids[:7]
+    plan.install_overrides({2: strip})
+    assert plan.epoch_length(2) == 7
+    assert plan.permutation(2) == strip
+    assert plan.epoch_length(3) == len(plan)
+    assert plan.pending_overrides(2) == {2: strip}
+    assert plan.pending_overrides(3) == {}        # consumed overrides drop
+    # the override epoch participates in the infinite stream exactly once
+    stream = plan.iter_from(2, 0)
+    got = [next(stream) for _ in range(7 + len(plan))]
+    assert [u for e, u in got[:7]] == strip
+    assert all(e == 3 for e, u in got[7:])
+
+
+def test_from_samples_is_verbatim():
+    uuids = _uuids(10)
+    plan = EpochPlan.from_samples(uuids, seed=9, shard_id=1, num_shards=3)
+    assert plan._uuids == uuids and len(plan) == 10
+    assert (plan.shard_id, plan.num_shards) == (1, 3)
+
+
+# ---------------------------------------------------------------------------
+# Placement policies
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(0, 300), n_hosts=st.integers(1, 9),
+       seed=st.integers(0, 50))
+@settings(max_examples=30, deadline=None)
+def test_token_aware_split_is_balanced_partition(n, n_hosts, seed):
+    """token_aware keeps the exact sharding semantics of contiguous: a
+    balanced partition (sizes differ by <= 1, nothing lost or duplicated)."""
+    uuids = _uuids(n, seed=seed)
+    names = [f"node{i}" for i in range(N_NODES)]
+    strips = split_strips(uuids, n_hosts, "token_aware", ring=_ring(), rf=RF,
+                          preferred=preferred_node_subsets(names, n_hosts))
+    sizes = [len(s) for s in strips]
+    assert sum(sizes) == n and max(sizes) - min(sizes) <= 1 if sizes else True
+    flat = [str(u) for s in strips for u in s]
+    assert len(flat) == len(set(flat)) == n
+    assert set(flat) == {str(u) for u in uuids}
+
+
+def test_token_aware_beats_contiguous_on_replica_locality():
+    """4 hosts on a 4-node rf=2 ring: greedy replica-skew should make nearly
+    every key replica-local, while contiguous placement sits near the
+    combinatorial baseline (~50%)."""
+    uuids = _uuids(400)
+    names = [f"node{i}" for i in range(N_NODES)]
+    ring, pref = _ring(), preferred_node_subsets(names, 4)
+    token = split_strips(uuids, 4, "token_aware", ring=ring, rf=RF,
+                         preferred=pref)
+    contig = split_contiguous(uuids, 4)
+    f_token = replica_local_fraction(token, ring, RF, pref)
+    f_contig = replica_local_fraction(contig, ring, RF, pref)
+    assert f_token > 0.9
+    assert f_token > f_contig + 0.2
+
+
+def test_preferred_node_subsets_cover_and_wrap():
+    names = [f"node{i}" for i in range(4)]
+    two = preferred_node_subsets(names, 2)       # fewer hosts: disjoint stripes
+    assert two == [("node0", "node2"), ("node1", "node3")]
+    six = preferred_node_subsets(names, 6)       # more hosts: wrap around
+    assert six[0] == ("node0",) and six[4] == ("node0",)
+    for subsets in (two, six):
+        assert set().union(*map(set, subsets)) == set(names)
+
+
+def test_split_strips_rejects_unknown_policy_and_missing_ring():
+    uuids = _uuids(8)
+    with pytest.raises(ValueError):
+        split_strips(uuids, 2, "round_robin")
+    with pytest.raises(ValueError):
+        split_strips(uuids, 2, "token_aware")    # no ring / preference map
