@@ -6,20 +6,28 @@ requests + connection failover keep every loader delivering).  Node NICs are
 pinched to 10 GbE so egress contention — the effect multi-host loading must
 survive — is visible at benchmark scale.
 
-Two extra sections cover the elastic/placement features:
+Three extra sections cover the elastic/placement/federation features:
 
 * placement policies — contiguous vs token-aware strips on the 4-node rf=2
   cluster: replica-local hit fraction and per-node egress spread.
 * elastic resharding — a checkpoint taken with N hosts restored onto M
   (4 -> 2 shrink, 2 -> 8 grow, and a 4 -> 2 resize with a node failing
   mid-restore), reporting throughput across the resize.
+* multi-cluster federation — one run spanning a local and an
+  intercontinental storage cluster (cluster-aware placement, per-cluster
+  egress + WAN-bytes share), vs an all-local baseline, with and without a
+  cluster-level outage degrading reads to the replica cluster.  The full
+  run reports land in ``results/multihost_federation.json``.
 """
 
 from __future__ import annotations
 
-from repro.core import MultiHostConfig, MultiHostRun
+import json
+import os
 
-from .common import make_store, write_csv
+from repro.core import ClusterSpec, MultiHostConfig, MultiHostRun
+
+from .common import RESULTS_DIR, make_store, write_csv
 
 NODE_EGRESS = 1.25e9        # 10 GbE per storage node
 N_NODES = 4
@@ -89,6 +97,10 @@ def run(seed: int = 11) -> str:
                     f"{rep1['aggregate_Bps']/1e6:.1f},,,"
                     f"{rep1['fairness']:.3f}")
 
+    # -- multi-cluster federation: local + intercontinental -----------------
+    lines.append("")
+    lines.extend(_federation_section(store, uuids, seed, rows))
+
     # -- node-failure scenario: node goes dark 25% into the run -------------
     lines.append("")
     lines.append("node-failure scenario (4 clients, node1 dark mid-run):")
@@ -106,6 +118,80 @@ def run(seed: int = 11) -> str:
               "clients,agg_MBps,client_min_MBps,client_max_MBps,fairness",
               rows)
     return "\n".join(lines)
+
+
+def _fed_cfg(routes, seed: int) -> MultiHostConfig:
+    """4 hosts over a 2-cluster federation.  prefetch_buffers/ramp_every are
+    sized so the in-flight window covers the intercontinental route's
+    bandwidth-delay product (~150 ms x ~2.4 GB/s per host) — the same
+    deeper-prefetch story as the paper's Sec. 3.4, one level up."""
+    specs = tuple(ClusterSpec(name, route=route, n_nodes=N_NODES,
+                              replication_factor=2,
+                              node_egress_bandwidth=NODE_EGRESS)
+                  for name, route in routes)
+    return MultiHostConfig(n_hosts=4, batch_size=256, prefetch_buffers=24,
+                           io_threads=8, ramp_every=1, hedge_after=1.0,
+                           seed=seed, placement="cluster_aware",
+                           clusters=specs)
+
+
+def _federation_section(store, uuids, seed: int, rows) -> list:
+    lines = ["multi-cluster federation (4 clients, 2x 4-node rf=2 clusters, "
+             "cluster-aware placement):"]
+    lines.append(f"  {'scenario':>22s} {'agg MB/s':>9s} {'WAN share':>9s} "
+                 f"{'replica-local':>13s} {'cluster failovers':>17s}")
+    emitted = {}
+
+    def row(tag, rep):
+        lines.append(f"  {tag:>22s} {rep['aggregate_Bps']/1e6:9.0f} "
+                     f"{rep.get('wan_bytes_share', 0.0):9.2f} "
+                     f"{rep['replica_local_hit_frac']:13.2f} "
+                     f"{rep.get('cluster_failovers', 0):17d}")
+        rows.append(f"fed/{tag.replace(' ', '_')},"
+                    f"{rep['aggregate_Bps']/1e6:.1f},,,"
+                    f"{rep['fairness']:.3f}")
+        emitted[tag] = rep
+
+    # baseline: same federated topology, but both clusters in-region
+    base = MultiHostRun(store, uuids, _fed_cfg(
+        (("dc0", "local"), ("dc1", "local")), seed)).run(ROUNDS)
+    row("all-local", base)
+
+    # half the keyspace an ocean away (one local + one intercontinental)
+    fed = MultiHostRun(store, uuids, _fed_cfg(
+        (("onprem", "local"), ("overseas", "high")), seed)).run(ROUNDS)
+    row("local+intercontinental", fed)
+    ratio = base["aggregate_Bps"] / max(fed["aggregate_Bps"], 1.0)
+    lines.append(f"  -> federation sustains 1/{ratio:.2f} of all-local "
+                 f"aggregate (target: within 2x)"
+                 + ("" if ratio <= 2.0 else "  [MISSED]"))
+    egress = fed["per_cluster_egress_share"]
+    lines.append("  -> per-cluster egress share: "
+                 + ", ".join(f"{c}={v:.2f}" for c, v in egress.items()))
+
+    # cluster-level outage: the intercontinental member goes dark mid-run
+    # and its keys degrade to the surviving (replica) cluster
+    out = MultiHostRun(store, uuids, _fed_cfg(
+        (("onprem", "local"), ("overseas", "high")), seed)).start()
+    warm = out.run(ROUNDS // 3)
+    out.inject_cluster_outage("overseas", after=0.0)
+    degraded = out.run(2 * ROUNDS // 3)
+    row("overseas dark", degraded)
+    lines.append(f"  -> outage: {warm['aggregate_Bps']/1e6:.0f} -> "
+                 f"{degraded['aggregate_Bps']/1e6:.0f} MB/s, WAN share "
+                 f"{warm['wan_bytes_share']:.2f} -> "
+                 f"{degraded['wan_bytes_share']:.2f}, all "
+                 f"{4 * 2 * ROUNDS // 3} batches delivered")
+    emitted["overseas warm"] = warm
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "multihost_federation.json")
+    with open(path, "w") as f:
+        json.dump({"seed": seed, "rounds": ROUNDS,
+                   "all_local_over_federated_ratio": ratio,
+                   "scenarios": emitted}, f, indent=2, sort_keys=True)
+    lines.append(f"  (full reports: {os.path.relpath(path)})")
+    return lines
 
 
 def main() -> None:

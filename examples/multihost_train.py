@@ -11,10 +11,16 @@ demonstrating that (a) the checkpoint captures a consistent batch boundary,
 (b) the reflow preserves exactly-once delivery per epoch, and (c) hedged
 requests + connection failover ride through the node failure.
 
+A final phase federates the same dataset across TWO storage clusters — one
+local, one an intercontinental WAN hop away (the data stays where it was
+produced) — with cluster-aware placement routing every key to its owning
+cluster and a replica-local node inside it.  Mid-phase the overseas cluster
+suffers a region outage and reads degrade to the surviving cluster.
+
 Run: PYTHONPATH=src python examples/multihost_train.py
 """
 
-from repro.core import KVStore, MultiHostConfig, MultiHostRun
+from repro.core import ClusterSpec, KVStore, MultiHostConfig, MultiHostRun
 from repro.data.datasets import SyntheticImageDataset, ingest
 
 N_HOSTS = 4
@@ -73,6 +79,34 @@ def main() -> None:
     print(f"\nresized run advanced {resumed['rounds']} steps "
           f"(global step {ckpt['rounds'] + resumed['rounds']}) — "
           "all shards at one consistent boundary")
+
+    # phase 3: the same dataset federated across two storage clusters, one
+    # of them an ocean away; deeper prefetch hides the WAN latency, and a
+    # cluster-level outage degrades reads to the surviving cluster
+    specs = (ClusterSpec("onprem", route="local", n_nodes=4,
+                         replication_factor=2,
+                         node_egress_bandwidth=1.25e9),
+             ClusterSpec("overseas", route="high", n_nodes=4,
+                         replication_factor=2,
+                         node_egress_bandwidth=1.25e9))
+    fed_cfg = MultiHostConfig(n_hosts=N_HOSTS, batch_size=256,
+                              prefetch_buffers=24, io_threads=8,
+                              ramp_every=1, hedge_after=1.0, seed=4,
+                              placement="cluster_aware", clusters=specs)
+    fed = MultiHostRun(store, uuids, fed_cfg).start()
+    print(f"\nphase 3 (federated): {fed.describe()}")
+    own = fed.federation.ownership_counts(uuids)
+    print(f"  ownership: " + ", ".join(f"{c}={n}" for c, n in own.items()))
+    rep3 = fed.run(STEPS_PER_PHASE, step_time=STEP_TIME)
+    print(f"  {rep3['aggregate_Bps']/1e6:.0f} MB/s aggregate, WAN-bytes "
+          f"share {rep3['wan_bytes_share']:.0%}, replica-local "
+          f"{rep3['replica_local_hit_frac']:.0%}")
+    fed.inject_cluster_outage("overseas", after=0.0)
+    rep4 = fed.run(STEPS_PER_PHASE, step_time=STEP_TIME)
+    print(f"  overseas region dark: {rep4['aggregate_Bps']/1e6:.0f} MB/s, "
+          f"WAN-bytes share {rep4['wan_bytes_share']:.0%}, "
+          f"{rep4['cluster_failovers']} cluster failovers — "
+          "reads degraded to the surviving cluster, nothing lost")
 
 
 if __name__ == "__main__":

@@ -4,6 +4,9 @@ out-of-order, incremental prefetching over NoSQL storage."""
 from .batch_loader import AssembledBatch, BatchAssembler
 from .cluster import Cluster, TokenRing
 from .connection import ConnectionPool, FetchResult
+from .federation import (ClusterSpec, FederatedCluster,
+                         FederatedConnectionPool, FederatedRing,
+                         federated_preferred_subsets)
 from .kvstore import DataRow, KVStore, MetaRow, make_uuid, token_of
 from .loader import CassandraLoader, LoaderConfig, consume_with_step_time, tight_loop
 from .multihost import MultiHostConfig, MultiHostRun
@@ -18,7 +21,9 @@ from .splits import SplitSpec, check_entity_independence, create_splits
 
 __all__ = [
     "AssembledBatch", "BatchAssembler", "Cluster", "TokenRing",
-    "ConnectionPool", "FetchResult", "DataRow", "KVStore", "MetaRow",
+    "ConnectionPool", "FetchResult", "ClusterSpec", "FederatedCluster",
+    "FederatedConnectionPool", "FederatedRing",
+    "federated_preferred_subsets", "DataRow", "KVStore", "MetaRow",
     "make_uuid", "token_of", "CassandraLoader", "LoaderConfig",
     "MultiHostConfig", "MultiHostRun",
     "consume_with_step_time", "tight_loop", "BACKENDS", "CASSANDRA", "SCYLLA",

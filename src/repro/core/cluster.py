@@ -64,7 +64,8 @@ class Cluster:
     def __init__(self, clock: Clock, store: KVStore, backend: str = "scylla",
                  n_nodes: int = 1, rf: int = 1, seed: int = 1234,
                  disk_bandwidth: float = DISK_BANDWIDTH,
-                 egress_bandwidth: float = NIC_BANDWIDTH) -> None:
+                 egress_bandwidth: float = NIC_BANDWIDTH,
+                 node_prefix: str = "") -> None:
         if isinstance(backend, str):
             backend_model = BACKENDS[backend]
         else:
@@ -74,7 +75,10 @@ class Cluster:
         self.backend = backend_model
         self.rf = min(rf, n_nodes)
         self.ring_seed = seed     # recorded so checkpoints can rebuild the ring
-        names = [f"node{i}" for i in range(n_nodes)]
+        # A federation member qualifies its node names ("eu/node0") so the
+        # merged node namespace stays collision-free across clusters.
+        self.node_prefix = node_prefix
+        names = [f"{node_prefix}node{i}" for i in range(n_nodes)]
         self.nodes: Dict[str, SimServerNode] = {
             name: SimServerNode(name, backend_model,
                                 np.random.default_rng(seed + 17 * i),

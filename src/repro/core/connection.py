@@ -44,7 +44,9 @@ class ConnectionPool:
                  hedge_after: Optional[float] = None,
                  materialize: bool = False,
                  client_ingress_bandwidth: float = NIC_BANDWIDTH,
-                 preferred_nodes: Optional[Iterable[str]] = None) -> None:
+                 preferred_nodes: Optional[Iterable[str]] = None,
+                 ingress: Optional[RateResource] = None,
+                 on_exhausted: Optional[Callable] = None) -> None:
         if isinstance(route, str):
             route = TIERS[route]
         self.clock = clock
@@ -52,13 +54,22 @@ class ConnectionPool:
         self.route = route
         self.materialize = materialize
         self.hedge_after = hedge_after
+        # Cluster-level failover hook (multi-cluster federation): called as
+        # ``on_exhausted(key, on_done) -> bool`` once every connection of this
+        # pool has failed for a request.  Returning True means another pool
+        # (a replica cluster's) took the request over; False falls back to
+        # the backoff-and-retry-here loop (single-cluster behaviour).
+        self.on_exhausted = on_exhausted
         # Token-aware *placement* (see core/placement.py) skews this host's
         # keys toward replicas on its preferred nodes; biasing routing the
         # same way concentrates the host's egress there.  None = unbiased.
         self.preferred_nodes = (frozenset(preferred_nodes)
                                 if preferred_nodes else None)
         self._rng = np.random.default_rng(seed)
-        self.ingress = RateResource("client/ingress", client_ingress_bandwidth)
+        # Federation sub-pools share one ingress: a host has one NIC no
+        # matter how many storage clusters it talks to.
+        self.ingress = ingress or RateResource("client/ingress",
+                                               client_ingress_bandwidth)
         n_conns = io_threads * conns_per_thread
         node_list = list(cluster.nodes.values())
         self.connections: List[SimConnection] = []
@@ -139,15 +150,24 @@ class ConnectionPool:
                     return  # the other (hedged) attempt already answered
                 self.failovers += 1
                 now_tried = tried | {conn}
-                if len(now_tried) >= len(self.connections):
-                    # everything failed once: back off an RTT, start over
+                nxt = self._pick_connection(key, exclude=now_tried)
+                if nxt in now_tried:
+                    # no untried connection left for this key (e.g. the whole
+                    # cluster is dark): a federated pool may divert the
+                    # request to a replica cluster (cluster-level outage).
+                    # Marking the fetch done stops the hedge timer and any
+                    # late completion from double-counting it here.
+                    if (self.on_exhausted is not None
+                            and self.on_exhausted(key, on_done)):
+                        state["done"] = True
+                        return
+                    # ...otherwise back off an RTT, start over
                     self.clock.schedule(
                         max(self.route.rtt, 1e-3),
                         lambda: state["done"] or attempt(
                             self._pick_connection(key), hedged, frozenset()))
                     return
-                attempt(self._pick_connection(key, exclude=now_tried),
-                        hedged, now_tried)
+                attempt(nxt, hedged, now_tried)
 
             conn.request(row.size, lambda t: complete(conn, hedged, t), failed)
 

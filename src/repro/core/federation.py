@@ -1,0 +1,457 @@
+"""Multi-cluster federation: one training run spanning several storage
+clusters over heterogeneous WAN routes.
+
+The paper's headline result is sustaining training throughput when the image
+store sits behind a high-latency route (local vs medium vs intercontinental,
+Sec. 4.2).  This module models the next step on that axis: a *single* run
+whose dataset is spread across N storage clusters — each with its own token
+ring, node set, replication factor and WAN route — so data can live in the
+region where it was produced.
+
+Pieces, bottom up:
+
+``ClusterSpec``
+    Declarative description of one member cluster: name, route tier (a
+    ``netsim.TIERS`` key or a ``RouteProfile``), backend, node count,
+    replication factor, ownership ``weight`` and per-node bandwidths.
+
+``FederatedRing``
+    The keyspace-level routing object.  Every uuid belongs to exactly one
+    member cluster — the dataset->cluster *ownership map*, computed
+    deterministically from the key's token and the members' weights — and
+    ``replicas(key)`` returns only the owning cluster's replica nodes,
+    qualified as ``"<cluster>/<node>"``.  Because it quacks like a
+    ``TokenRing``, the existing ``split_token_aware`` placement runs over it
+    unchanged and becomes *cluster-aware*: prefer the key's same-region
+    cluster, then a replica-local node within it.  A ring can be rebuilt
+    from checkpoint metadata alone (``FederatedRing.from_metadata``), so
+    elastic restores never need the original simulator objects.
+
+``FederatedCluster``
+    Composes N ``Cluster`` instances behind one keyspace (one shared
+    ``KVStore``: the logical contents are global; per-node simulation state —
+    disk, NIC egress, GC — stays per cluster, so routing decisions have
+    performance consequences).  Duck-types the slice of the ``Cluster``
+    surface that ``MultiHostRun`` consumes (``nodes``, ``ring``, ``rf``,
+    ``node_names``, ``load_report``, ``schedule_failure``...), plus
+    cluster-level failure injection (``schedule_cluster_outage``) and a
+    cluster-of-node reverse map for per-cluster egress accounting.
+
+``FederatedConnectionPool``
+    One *per-cluster* ``ConnectionPool`` per member — each with the member's
+    own ``RouteProfile`` and AIMD processes, all sharing one client-ingress
+    NIC (a host has one NIC no matter how many clusters it talks to).
+    ``fetch`` routes each key to its owning cluster; when that cluster has
+    no live node (cluster-level outage), or when every connection to it has
+    failed mid-flight, the request *degrades* to the next cluster in
+    failover order — possible because the keyspace is shared, exactly the
+    replica-cluster degradation the federation benchmark exercises.  A
+    once-guard keeps delivery exactly-once even when a hedge and a
+    cross-cluster failover race.
+
+Exactly-once per epoch is a *plan* property (``EpochPlan`` strips are
+disjoint and jointly covering; see ``core/prefetcher.py``), not a routing
+one — so it holds across the federation, through cluster outages and
+through elastic N->M resizes, without this module doing anything special.
+"""
+
+from __future__ import annotations
+
+import uuid as _uuid
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .cluster import Cluster, TokenRing
+from .connection import ConnectionPool
+from .kvstore import KVStore, token_of
+from .netsim import (DISK_BANDWIDTH, NIC_BANDWIDTH, Clock, RateResource,
+                     RouteProfile, TIERS)
+from .placement import preferred_node_subsets
+
+# A route is "WAN" when its RTT clears this threshold — separates the paper's
+# local/low tiers (same building / same region) from med/high (cross-region /
+# intercontinental) for the wan_bytes_share accounting.
+WAN_RTT_THRESHOLD = 0.005
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """One member cluster of a federation."""
+
+    name: str
+    route: str | RouteProfile = "local"  # TIERS key or explicit profile
+    backend: str = "scylla"
+    n_nodes: int = 4
+    replication_factor: int = 2
+    weight: int = 1                      # ownership share of the keyspace
+    node_egress_bandwidth: float = NIC_BANDWIDTH
+    node_disk_bandwidth: float = DISK_BANDWIDTH
+
+    def route_profile(self) -> RouteProfile:
+        return TIERS[self.route] if isinstance(self.route, str) else self.route
+
+    @property
+    def is_wan(self) -> bool:
+        return self.route_profile().rtt > WAN_RTT_THRESHOLD
+
+
+class FederatedRing:
+    """Keyspace-level ring: per-cluster token rings + weighted ownership.
+
+    ``owner_of(key)`` maps a key's token onto the member clusters by
+    cumulative weight (md5 tokens are uniform, so shares converge to the
+    weights); ``replicas(key)`` walks only the owning cluster's ring with
+    that cluster's replication factor.  Both are pure functions of
+    ``metadata()``, which is what checkpoints record.
+    """
+
+    def __init__(self, names: Sequence[str], rings: Dict[str, TokenRing],
+                 rfs: Dict[str, int], weights: Dict[str, int],
+                 ring_seeds: Dict[str, int],
+                 n_nodes: Dict[str, int]) -> None:
+        if not names:
+            raise ValueError("a federation needs at least one cluster")
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate cluster names in {list(names)}")
+        if any(weights[n] < 1 for n in names):
+            raise ValueError("cluster ownership weights must be >= 1")
+        self.names = list(names)
+        self._rings = rings
+        self._rfs = rfs
+        self._weights = weights
+        self._ring_seeds = ring_seeds
+        self._n_nodes = n_nodes
+        self._total_weight = sum(weights[n] for n in names)
+        self._cum: List[Tuple[int, str]] = []
+        acc = 0
+        for n in names:
+            acc += weights[n]
+            self._cum.append((acc, n))
+
+    @classmethod
+    def from_clusters(cls, specs: Sequence[ClusterSpec],
+                      clusters: Dict[str, Cluster]) -> "FederatedRing":
+        names = [s.name for s in specs]
+        return cls(names,
+                   rings={s.name: clusters[s.name].ring for s in specs},
+                   rfs={s.name: clusters[s.name].rf for s in specs},
+                   weights={s.name: s.weight for s in specs},
+                   ring_seeds={s.name: clusters[s.name].ring_seed
+                               for s in specs},
+                   n_nodes={s.name: s.n_nodes for s in specs})
+
+    @classmethod
+    def from_metadata(cls, meta: Sequence[Dict]) -> "FederatedRing":
+        """Rebuild the ring from checkpoint metadata (see :meth:`metadata`) —
+        strips are deterministic functions of it, so elastic restores can
+        reconstruct an old federation's sharding without its simulator."""
+        names = [m["name"] for m in meta]
+        rings = {m["name"]: TokenRing(
+            [f"{m['name']}/node{i}" for i in range(m["n_nodes"])],
+            seed=m["ring_seed"]) for m in meta}
+        return cls(names, rings,
+                   rfs={m["name"]: m["rf"] for m in meta},
+                   weights={m["name"]: m["weight"] for m in meta},
+                   ring_seeds={m["name"]: m["ring_seed"] for m in meta},
+                   n_nodes={m["name"]: m["n_nodes"] for m in meta})
+
+    def metadata(self) -> List[Dict]:
+        """Everything strip construction depends on, JSON-serializable."""
+        return [{"name": n, "n_nodes": self._n_nodes[n],
+                 "ring_seed": self._ring_seeds[n], "rf": self._rfs[n],
+                 "weight": self._weights[n]} for n in self.names]
+
+    # -- ownership ----------------------------------------------------------
+    def owner_of(self, key: _uuid.UUID) -> str:
+        slot = token_of(key) % self._total_weight
+        for acc, name in self._cum:
+            if slot < acc:
+                return name
+        return self._cum[-1][1]          # unreachable; defensive
+
+    def failover_order(self, owner: str) -> List[str]:
+        """Owner first, then the remaining clusters in declaration order —
+        the degradation path when a whole cluster goes dark."""
+        return [owner] + [n for n in self.names if n != owner]
+
+    # -- TokenRing surface ---------------------------------------------------
+    def replicas(self, key: _uuid.UUID, rf: int = 0) -> List[str]:
+        """Replica nodes of ``key`` *within its owning cluster* (qualified
+        names).  ``rf`` is accepted for TokenRing compatibility but each
+        cluster's own replication factor governs."""
+        owner = self.owner_of(key)
+        return self._rings[owner].replicas(key, self._rfs[owner])
+
+
+def federated_preferred_subsets(node_names_by_cluster: Dict[str, List[str]],
+                                n_hosts: int) -> List[Tuple[str, ...]]:
+    """Per-host preference map spanning every member cluster.
+
+    The union of per-cluster round-robin subsets
+    (:func:`repro.core.placement.preferred_node_subsets`), so every host has
+    a preferred node in every cluster that has one to give.  A flat
+    round-robin over the concatenated node list would leave some hosts with
+    no preferred node in some cluster whenever the host count doesn't divide
+    the per-cluster node counts — and a host with no local preference in the
+    intercontinental cluster would receive none of its keys in pass 1,
+    skewing the WAN work onto the other hosts.
+    """
+    out: List[Tuple[str, ...]] = [() for _ in range(n_hosts)]
+    for names in node_names_by_cluster.values():
+        for j, subset in enumerate(preferred_node_subsets(names, n_hosts)):
+            out[j] = out[j] + subset
+    return out
+
+
+class FederatedCluster:
+    """N member ``Cluster`` instances behind one keyspace.
+
+    Presents the ``Cluster`` surface ``MultiHostRun`` relies on (merged
+    ``nodes`` dict with qualified names, a ``ring``, ``rf``,
+    ``load_report()``, ``schedule_failure()``), plus federation-only
+    operations: the ownership map, cluster-level outage injection, and
+    per-cluster load/egress summaries.
+    """
+
+    def __init__(self, clock: Clock, store: KVStore,
+                 specs: Sequence[ClusterSpec], seed: int = 1234) -> None:
+        specs = tuple(specs)
+        if not specs:
+            raise ValueError("a federation needs at least one ClusterSpec")
+        if len({s.name for s in specs}) != len(specs):
+            raise ValueError("duplicate cluster names in federation")
+        for s in specs:
+            if "/" in s.name:
+                raise ValueError(f"cluster name {s.name!r} may not contain "
+                                 "'/' (reserved for node qualification)")
+        self.clock = clock
+        self.store = store
+        self.specs = specs
+        self.ring_seed = seed
+        self.clusters: Dict[str, Cluster] = {
+            s.name: Cluster(clock, store, backend=s.backend,
+                            n_nodes=s.n_nodes, rf=s.replication_factor,
+                            seed=seed + 101 * i,
+                            disk_bandwidth=s.node_disk_bandwidth,
+                            egress_bandwidth=s.node_egress_bandwidth,
+                            node_prefix=f"{s.name}/")
+            for i, s in enumerate(specs)
+        }
+        self.routes: Dict[str, RouteProfile] = {
+            s.name: s.route_profile() for s in specs}
+        self.ring = FederatedRing.from_clusters(specs, self.clusters)
+
+    # -- ownership / topology ------------------------------------------------
+    def owner_of(self, key: _uuid.UUID) -> str:
+        return self.ring.owner_of(key)
+
+    def ownership_counts(self, uuids: Sequence[_uuid.UUID]) -> Dict[str, int]:
+        counts = {s.name: 0 for s in self.specs}
+        for u in uuids:
+            counts[self.owner_of(u)] += 1
+        return counts
+
+    def serving_cluster(self, key: _uuid.UUID,
+                        exclude: frozenset = frozenset()) -> Optional[str]:
+        """First *live* cluster in the owner's failover order, skipping
+        ``exclude``; ``None`` when every candidate is dark.  The single
+        authority on degradation order — routing and mid-flight failover
+        both go through here (keyspace is shared, so any member can serve
+        any key)."""
+        for name in self.ring.failover_order(self.owner_of(key)):
+            if name not in exclude and self.clusters[name].alive_nodes():
+                return name
+        return None
+
+    def cluster_of_node(self, qualified_name: str) -> str:
+        return qualified_name.split("/", 1)[0]
+
+    def node_names_by_cluster(self) -> Dict[str, List[str]]:
+        return {s.name: self.clusters[s.name].node_names()
+                for s in self.specs}
+
+    def wan_clusters(self) -> frozenset:
+        return frozenset(s.name for s in self.specs if s.is_wan)
+
+    # -- Cluster-compatible surface -----------------------------------------
+    @property
+    def nodes(self) -> Dict:
+        merged = {}
+        for s in self.specs:
+            merged.update(self.clusters[s.name].nodes)
+        return merged
+
+    @property
+    def rf(self) -> int:
+        # only consulted by TokenRing-compatible call sites; the federated
+        # ring applies each member's own rf regardless.
+        return max(self.clusters[s.name].rf for s in self.specs)
+
+    def node_names(self) -> List[str]:
+        return [n for s in self.specs
+                for n in self.clusters[s.name].node_names()]
+
+    def alive_nodes(self) -> List[str]:
+        return [n for s in self.specs
+                for n in self.clusters[s.name].alive_nodes()]
+
+    def total_disk_bytes(self) -> int:
+        return sum(self.clusters[s.name].total_disk_bytes()
+                   for s in self.specs)
+
+    # -- failure injection ---------------------------------------------------
+    def schedule_failure(self, qualified_name: str, after: float,
+                         recover_after: Optional[float] = None) -> None:
+        cname = self.cluster_of_node(qualified_name)
+        self.clusters[cname].schedule_failure(qualified_name, after,
+                                              recover_after)
+
+    def schedule_cluster_outage(self, name: str, after: float,
+                                recover_after: Optional[float] = None) -> None:
+        """Take a whole member cluster dark (region outage / WAN partition):
+        every node fails at once, so reads degrade to the replica cluster."""
+        for node in self.clusters[name].node_names():
+            self.clusters[name].schedule_failure(node, after, recover_after)
+
+    # -- load reporting -----------------------------------------------------
+    def load_report(self) -> Dict[str, Dict[str, float]]:
+        """Per-node report over qualified names (merged member reports)."""
+        merged: Dict[str, Dict[str, float]] = {}
+        for s in self.specs:
+            merged.update(self.clusters[s.name].load_report())
+        return merged
+
+    def cluster_report(self) -> Dict[str, Dict[str, float]]:
+        """Per-cluster rollup: egress, requests, route tier, liveness."""
+        out: Dict[str, Dict[str, float]] = {}
+        total_egress = max(sum(n.egress_bytes for n in self.nodes.values()), 1)
+        for s in self.specs:
+            cl = self.clusters[s.name]
+            egress = sum(n.egress_bytes for n in cl.nodes.values())
+            out[s.name] = {
+                "route": s.route if isinstance(s.route, str)
+                         else s.route_profile().name,
+                "rtt": self.routes[s.name].rtt,
+                "wan": float(s.is_wan),
+                "egress_bytes": egress,
+                "egress_share": egress / total_egress,
+                "requests": sum(n.requests_served for n in cl.nodes.values()),
+                "nodes_down": sum(1 for n in cl.nodes.values() if n.down),
+                "n_nodes": s.n_nodes,
+            }
+        return out
+
+
+class FederatedConnectionPool:
+    """All connections of one training host to every member cluster.
+
+    Mirrors the ``ConnectionPool`` surface the prefetcher and the multi-host
+    coordinator consume (``fetch``, ``bytes_received``, ``requests_sent``,
+    ``failovers``, ``served_by_node``, ``inflight``), aggregating over one
+    sub-pool per member cluster.  Each sub-pool runs the member's own
+    ``RouteProfile`` (own RTT, own AIMD bandwidth processes); all sub-pools
+    share one client-ingress NIC.
+    """
+
+    def __init__(self, clock: Clock, federation: FederatedCluster,
+                 io_threads: int = 8, conns_per_thread: int = 2,
+                 seed: int = 99, hedge_after: Optional[float] = None,
+                 materialize: bool = False,
+                 client_ingress_bandwidth: float = NIC_BANDWIDTH,
+                 preferred_nodes: Optional[Sequence[str]] = None) -> None:
+        self.clock = clock
+        self.federation = federation
+        self.cluster = federation          # Cluster-surface alias
+        self.ingress = RateResource("client/ingress",
+                                    client_ingress_bandwidth)
+        self.cluster_failovers = 0         # fetches served off-owner
+        self.duplicates_suppressed = 0     # late completions the once-guard ate
+        preferred = list(preferred_nodes or ())
+        self.pools: Dict[str, ConnectionPool] = {}
+        for i, spec in enumerate(federation.specs):
+            # this host's preferred nodes *within* this member cluster
+            prefix = f"{spec.name}/"
+            local_pref = [n for n in preferred if n.startswith(prefix)]
+            self.pools[spec.name] = ConnectionPool(
+                clock, federation.clusters[spec.name],
+                federation.routes[spec.name],
+                io_threads=io_threads, conns_per_thread=conns_per_thread,
+                seed=seed + 7919 * i, hedge_after=hedge_after,
+                materialize=materialize,
+                preferred_nodes=local_pref or None,
+                ingress=self.ingress,
+                on_exhausted=self._make_exhausted(spec.name))
+
+    # -- fetch --------------------------------------------------------------
+    def fetch(self, key: _uuid.UUID,
+              on_done: Callable) -> None:
+        """Route ``key`` to its owning cluster (degraded to a live replica
+        cluster when the owner is dark).  Delivery is exactly-once even when
+        a hedge in a dying cluster races the cross-cluster failover."""
+        state = {"done": False}
+
+        def once(res) -> None:
+            if state["done"]:
+                self.duplicates_suppressed += 1
+                return
+            state["done"] = True
+            on_done(res)
+
+        owner = self.federation.owner_of(key)
+        # total blackout: keep targeting the owner, whose pool backs off and
+        # retries (so a recovering cluster is picked up automatically)
+        target = self.federation.serving_cluster(key) or owner
+        if target != owner:
+            self.cluster_failovers += 1
+        self.pools[target].fetch(key, once)
+
+    def _make_exhausted(self, cname: str):
+        """Cluster-level failover: when every connection to ``cname`` has
+        failed for a request, hand it to the next live cluster.  Returns
+        False (keep backing off in place) when no other cluster is alive,
+        so a total blackout still surfaces as the caller's timeout and a
+        recovering cluster is picked up automatically."""
+        def handler(key: _uuid.UUID, on_done: Callable) -> bool:
+            target = self.federation.serving_cluster(
+                key, exclude=frozenset((cname,)))
+            if target is None:
+                return False
+            if target != self.federation.owner_of(key):
+                self.cluster_failovers += 1
+            self.pools[target].fetch(key, on_done)
+            return True
+        return handler
+
+    # -- aggregated counters (ConnectionPool surface) ------------------------
+    @property
+    def bytes_received(self) -> int:
+        return sum(p.bytes_received for p in self.pools.values())
+
+    @property
+    def requests_sent(self) -> int:
+        return sum(p.requests_sent for p in self.pools.values())
+
+    @property
+    def failovers(self) -> int:
+        return sum(p.failovers for p in self.pools.values())
+
+    @property
+    def served_by_node(self) -> Dict[str, int]:
+        merged: Dict[str, int] = {}
+        for p in self.pools.values():
+            for name, count in p.served_by_node.items():
+                merged[name] = merged.get(name, 0) + count
+        return merged
+
+    @property
+    def inflight(self) -> int:
+        return sum(p.inflight for p in self.pools.values())
+
+    def throughput_traces(self, window: float = 0.5):
+        return {name: p.throughput_traces(window)
+                for name, p in self.pools.items()}
+
+
+__all__ = ["ClusterSpec", "FederatedRing", "FederatedCluster",
+           "FederatedConnectionPool", "federated_preferred_subsets",
+           "WAN_RTT_THRESHOLD"]

@@ -52,7 +52,8 @@ class CassandraLoader:
     def __init__(self, store: KVStore, uuids: List[_uuid.UUID],
                  cfg: LoaderConfig, clock: Optional[Clock] = None,
                  cluster: Optional[Cluster] = None,
-                 plan: Optional[EpochPlan] = None) -> None:
+                 plan: Optional[EpochPlan] = None,
+                 pool=None) -> None:
         self.cfg = cfg
         self.clock = clock or (VirtualClock() if cfg.virtual_clock else RealClock())
         self.cluster = cluster or Cluster(
@@ -60,8 +61,10 @@ class CassandraLoader:
             rf=cfg.replication_factor, seed=cfg.seed + 5)
         # Pool randomness is decorrelated per shard (each host sees its own
         # network weather); the *plan* seed must stay shared across shards so
-        # every host computes the same global shuffle.
-        self.pool = ConnectionPool(
+        # every host computes the same global shuffle.  An externally-built
+        # pool (e.g. a FederatedConnectionPool spanning several clusters,
+        # each with its own route) replaces the single-route default.
+        self.pool = pool or ConnectionPool(
             self.clock, self.cluster, TIERS[cfg.route],
             io_threads=cfg.io_threads, conns_per_thread=cfg.conns_per_thread,
             seed=cfg.seed + 11 + 7919 * cfg.shard_id,

@@ -31,15 +31,49 @@ plain M-host sharding (identical to a run that started with M hosts).
 Failure injection (``inject_failure``) takes a ``SimServerNode`` dark
 mid-run; hedged requests plus the connection-pool failover path keep all
 loaders alive through it (requests re-route to live replicas).
+
+Multi-cluster federation (``MultiHostConfig.clusters``): instead of one
+shared cluster, the run spans several storage clusters — each with its own
+token ring, node set, replication factor and WAN route (``core/federation``).
+Every uuid is owned by exactly one member cluster; each host's
+``FederatedConnectionPool`` routes fetches to the owning cluster over that
+cluster's route, degrading to a replica cluster when the owner is dark.
+``cluster_aware`` placement prefers the key's same-region cluster first and
+a replica-local node within it second; the run report breaks out
+per-cluster egress and the WAN-bytes share.  Checkpoints record the
+federation's ring metadata, so elastic restores rebuild the old strips
+exactly — across host-count changes AND federation changes.
+
+Invariants this module maintains (property-tested in
+``tests/test_resharding.py`` / ``tests/test_multihost.py`` /
+``tests/test_federation.py``):
+
+* **Exactly-once per epoch** — each epoch delivers every dataset uuid
+  exactly once across all hosts, through checkpoint/restore, elastic N->M
+  resizes, node failures and cluster outages.  It is a *plan* property
+  (strips are disjoint and jointly covering), never a routing one.
+* **Contiguous-strip-of-shuffle sharding** — strips are contiguous slices
+  of one seeded global shuffle (never strided slices of the raw uuid list),
+  so shards stay unbiased samples and sizes differ by at most one.
+* **M == N bit-identity** — restoring a checkpoint onto the same host count
+  with the same strip-defining metadata (seed, placement, ring, federation)
+  resumes each shard exactly where it stopped, bit-identical to an
+  uninterrupted run; any metadata mismatch triggers a reflow instead of
+  silently applying old cursors to different strips.
+* **Lockstep checkpoints** — the round-robin driver keeps every shard at the
+  same global batch boundary, so ``checkpoint()`` is always consistent.
 """
 
 from __future__ import annotations
 
 import uuid as _uuid
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from .cluster import Cluster, TokenRing
+from .federation import (ClusterSpec, FederatedCluster,
+                         FederatedConnectionPool, FederatedRing,
+                         federated_preferred_subsets)
 from .kvstore import KVStore
 from .loader import CassandraLoader, LoaderConfig
 from .netsim import DISK_BANDWIDTH, NIC_BANDWIDTH, VirtualClock
@@ -72,9 +106,17 @@ class MultiHostConfig:
     # client count grows.
     node_egress_bandwidth: float = NIC_BANDWIDTH
     node_disk_bandwidth: float = DISK_BANDWIDTH
-    # Shard placement policy: "contiguous" (paper-faithful strips) or
-    # "token_aware" (replica-skewed strips + preferred-node routing).
+    # Shard placement policy: "contiguous" (paper-faithful strips),
+    # "token_aware" (replica-skewed strips + preferred-node routing) or
+    # "cluster_aware" (federation: same-region cluster, then replica-local
+    # node; requires ``clusters``).
     placement: str = "contiguous"
+    # Multi-cluster federation: when set, the run spans these member
+    # clusters (per-cluster ring/route/rf/weight; see core/federation.py)
+    # instead of one shared cluster built from route/backend/n_nodes/
+    # replication_factor above, and each host talks to every member over
+    # that member's own route via a FederatedConnectionPool.
+    clusters: Optional[Tuple[ClusterSpec, ...]] = None
 
     def loader_config(self, shard_id: int,
                       preferred_nodes: Optional[tuple] = None) -> LoaderConfig:
@@ -111,19 +153,36 @@ class MultiHostRun:
         if cfg.placement not in PLACEMENT_POLICIES:
             raise ValueError(f"unknown placement policy {cfg.placement!r} "
                              f"(choose from {PLACEMENT_POLICIES})")
+        if cfg.placement == "cluster_aware" and not cfg.clusters \
+                and not isinstance(cluster, FederatedCluster):
+            raise ValueError("cluster_aware placement needs a federation "
+                             "(set MultiHostConfig.clusters)")
         self.cfg = cfg
         self.clock = clock or VirtualClock()
-        self.cluster = cluster or Cluster(
-            self.clock, store, backend=cfg.backend, n_nodes=cfg.n_nodes,
-            rf=cfg.replication_factor, seed=cfg.seed + 5,
-            disk_bandwidth=cfg.node_disk_bandwidth,
-            egress_bandwidth=cfg.node_egress_bandwidth)
+        if cluster is not None:
+            self.cluster = cluster
+        elif cfg.clusters:
+            self.cluster = FederatedCluster(self.clock, store, cfg.clusters,
+                                            seed=cfg.seed + 5)
+        else:
+            self.cluster = Cluster(
+                self.clock, store, backend=cfg.backend, n_nodes=cfg.n_nodes,
+                rf=cfg.replication_factor, seed=cfg.seed + 5,
+                disk_bandwidth=cfg.node_disk_bandwidth,
+                egress_bandwidth=cfg.node_egress_bandwidth)
+        self.federation = (self.cluster
+                           if isinstance(self.cluster, FederatedCluster)
+                           else None)
         self._uuids = list(uuids)
-        self.preferred = preferred_node_subsets(self.cluster.node_names(),
-                                                cfg.n_hosts)
-        if cfg.placement == "token_aware":
+        if self.federation is not None:
+            self.preferred = federated_preferred_subsets(
+                self.federation.node_names_by_cluster(), cfg.n_hosts)
+        else:
+            self.preferred = preferred_node_subsets(
+                self.cluster.node_names(), cfg.n_hosts)
+        if cfg.placement in ("token_aware", "cluster_aware"):
             strips = _steady_strips(uuids, cfg.seed, cfg.n_hosts,
-                                    "token_aware", ring=self.cluster.ring,
+                                    cfg.placement, ring=self.cluster.ring,
                                     rf=self.cluster.rf,
                                     preferred=self.preferred)
             plans = [EpochPlan.from_samples(strips[i], cfg.seed, i,
@@ -133,12 +192,24 @@ class MultiHostRun:
         else:       # contiguous: loader carves its own strip (PR1 semantics)
             plans = [None] * cfg.n_hosts
             prefs = [None] * cfg.n_hosts
-        self.loaders = [
-            CassandraLoader(store, uuids, cfg.loader_config(i, prefs[i]),
-                            clock=self.clock, cluster=self.cluster,
-                            plan=plans[i])
-            for i in range(cfg.n_hosts)
-        ]
+        self.loaders = []
+        for i in range(cfg.n_hosts):
+            pool = None
+            if self.federation is not None:
+                pool = FederatedConnectionPool(
+                    self.clock, self.federation,
+                    io_threads=cfg.io_threads,
+                    conns_per_thread=cfg.conns_per_thread,
+                    seed=cfg.seed + 11 + 104729 * i,
+                    hedge_after=cfg.hedge_after,
+                    materialize=cfg.materialize,
+                    preferred_nodes=prefs[i])
+            self.loaders.append(
+                CassandraLoader(store, uuids,
+                                cfg.loader_config(i, None if pool
+                                                  else prefs[i]),
+                                clock=self.clock, cluster=self.cluster,
+                                plan=plans[i], pool=pool))
         self.rounds_consumed = 0
         self._started = False
 
@@ -188,8 +259,16 @@ class MultiHostRun:
                 or checkpoint.get("placement",
                                   "contiguous") != self.cfg.placement):
             return False
-        if self.cfg.placement == "token_aware":
-            # token-aware strips also depend on the ring
+        if self.cfg.placement in ("token_aware", "cluster_aware"):
+            # ring-derived strips also depend on the topology: for a
+            # federation that is the full per-member ring metadata, for a
+            # single cluster the (node_names, ring_seed, rf) triple.
+            fed_meta = (self.federation.ring.metadata()
+                        if self.federation is not None else None)
+            if checkpoint.get("federation") != fed_meta:
+                return False
+            if self.federation is not None:
+                return True
             return (checkpoint.get("node_names",
                                    self.cluster.node_names())
                     == self.cluster.node_names()
@@ -221,7 +300,20 @@ class MultiHostRun:
         old_n = len(shards)
         seed = checkpoint.get("seed", self.cfg.seed)
         policy = checkpoint.get("placement", "contiguous")
-        if policy == "token_aware":
+        fed_meta = checkpoint.get("federation")
+        if policy in ("token_aware", "cluster_aware") and fed_meta:
+            # federated strips: rebuild the keyspace ring (per-member token
+            # rings + ownership weights) straight from the metadata
+            ring = FederatedRing.from_metadata(fed_meta)
+            preferred = federated_preferred_subsets(
+                {m["name"]: [f"{m['name']}/node{i}"
+                             for i in range(m["n_nodes"])]
+                 for m in fed_meta}, old_n)
+            strips = _steady_strips(self._uuids, seed, old_n, policy,
+                                    ring=ring, rf=0, preferred=preferred)
+            plans = [EpochPlan.from_samples(strips[i], seed, i, old_n)
+                     for i in range(old_n)]
+        elif policy == "token_aware":
             n_nodes = checkpoint.get("n_nodes", self.cfg.n_nodes)
             names = checkpoint.get("node_names",
                                    [f"node{i}" for i in range(n_nodes)])
@@ -246,8 +338,19 @@ class MultiHostRun:
 
     def inject_failure(self, node: str, after: float,
                        recover_after: Optional[float] = None) -> None:
-        """Schedule ``node`` to go dark ``after`` virtual seconds from now."""
+        """Schedule ``node`` to go dark ``after`` virtual seconds from now.
+        In a federation, node names are qualified: ``"eu/node2"``."""
         self.cluster.schedule_failure(node, after, recover_after)
+
+    def inject_cluster_outage(self, cluster_name: str, after: float,
+                              recover_after: Optional[float] = None) -> None:
+        """Take an entire member cluster dark (region outage): its keys
+        degrade to the replica cluster until it recovers."""
+        if self.federation is None:
+            raise ValueError("cluster outage injection needs a federation "
+                             "(set MultiHostConfig.clusters)")
+        self.federation.schedule_cluster_outage(cluster_name, after,
+                                                recover_after)
 
     # -- driving ------------------------------------------------------------
     def run(self, n_rounds: int, step_time: float = 0.0,
@@ -302,7 +405,7 @@ class MultiHostRun:
         egress_share = {name: d / egress_total
                         for name, d in egress_delta.items()}
         mean_share = 1.0 / max(len(egress_share), 1)
-        return {
+        report = {
             "n_hosts": self.cfg.n_hosts,
             "rounds": n_rounds,
             "elapsed_s": elapsed,
@@ -321,6 +424,26 @@ class MultiHostRun:
                                  if egress_share else 0.0),
             "cluster_load": self.cluster.load_report(),
         }
+        if self.federation is not None:
+            # break the window's egress out per member cluster; the WAN-bytes
+            # share is the fraction served over WAN routes (federation
+            # placement + routing exist to keep it pinned at the WAN
+            # clusters' ownership share, not above it)
+            per_cluster: Dict[str, int] = {s.name: 0
+                                           for s in self.federation.specs}
+            for name, delta in egress_delta.items():
+                per_cluster[self.federation.cluster_of_node(name)] += delta
+            total = max(sum(per_cluster.values()), 1)
+            wan = self.federation.wan_clusters()
+            report["per_cluster_egress_bytes"] = per_cluster
+            report["per_cluster_egress_share"] = {
+                c: v / total for c, v in per_cluster.items()}
+            report["wan_bytes_share"] = sum(
+                v for c, v in per_cluster.items() if c in wan) / total
+            report["cluster_failovers"] = sum(ld.pool.cluster_failovers
+                                              for ld in self.loaders)
+            report["cluster_report"] = self.federation.cluster_report()
+        return report
 
     # -- coordinated checkpointing ------------------------------------------
     def checkpoint(self) -> Dict:
@@ -340,7 +463,7 @@ class MultiHostRun:
                 s["overrides"] = {int(e): [str(u) for u in samples]
                                   for e, samples in pending.items()}
             shards.append(s)
-        return {
+        ck = {
             "rounds": self.rounds_consumed,
             "num_shards": self.cfg.n_hosts,
             "dataset_size": len(self._uuids),
@@ -352,12 +475,23 @@ class MultiHostRun:
             "replication_factor": self.cfg.replication_factor,
             "shards": shards,
         }
+        if self.federation is not None:
+            ck["federation"] = self.federation.ring.metadata()
+        return ck
 
     # -- introspection -------------------------------------------------------
     def shard_sizes(self) -> List[int]:
         return [len(ld.plan) for ld in self.loaders]
 
     def describe(self) -> str:
+        if self.federation is not None:
+            members = ", ".join(
+                f"{s.name}({s.n_nodes}x{s.backend}, rf={s.replication_factor},"
+                f" {s.route if isinstance(s.route, str) else s.route_profile().name}"
+                " route)" for s in self.federation.specs)
+            return (f"{self.cfg.n_hosts} hosts x B={self.cfg.batch_size} "
+                    f"-> federation [{members}] "
+                    f"({self.cfg.placement} placement)")
         return (f"{self.cfg.n_hosts} hosts x B={self.cfg.batch_size} "
                 f"-> {self.cfg.n_nodes}-node {self.cfg.backend} "
                 f"(rf={self.cfg.replication_factor}, {self.cfg.route} route, "

@@ -20,8 +20,27 @@ strip per host.  *How* that carving is done is a placement policy:
     client scaling from turning into all-to-all egress contention
     (cf. Krichevsky et al. on locality-blind shard assignment).
 
+``cluster_aware``
+    The federation generalization of ``token_aware`` (see
+    ``core/federation.py``).  The ring here is a ``FederatedRing``: every key
+    belongs to exactly one member cluster (the dataset->cluster ownership
+    map) and ``replicas()`` returns only *that* cluster's replica nodes,
+    qualified as ``"<cluster>/<node>"``.  The same greedy balanced split
+    therefore prefers the key's same-region cluster first and a replica-local
+    node within it second, while the preference map
+    (``federated_preferred_subsets``) guarantees every host a preferred node
+    in every member cluster — no host ends up with an all-WAN strip, which
+    matters because the multi-host driver consumes in lockstep and the
+    slowest host gates the round.
+
+Invariants shared by ALL policies (property-tested in
+``tests/test_resharding.py``): strips are pairwise disjoint, jointly cover
+the input, and differ in size by at most one.  Those are exactly the
+preconditions the prefetcher's exactly-once-per-epoch contract rests on.
+
 The module is deliberately dependency-light: a "ring" is anything with a
-``replicas(key, rf) -> List[str]`` method.
+``replicas(key, rf) -> List[str]`` method (``cluster_aware`` additionally
+expects an ``owner_of(key)`` method, i.e. a federation keyspace).
 """
 
 from __future__ import annotations
@@ -31,7 +50,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-PLACEMENT_POLICIES = ("contiguous", "token_aware")
+PLACEMENT_POLICIES = ("contiguous", "token_aware", "cluster_aware")
 
 
 def global_order(uuids: Sequence[_uuid.UUID], seed: int,
@@ -122,10 +141,17 @@ def split_strips(samples: Sequence[_uuid.UUID], num_shards: int,
     """Split ``samples`` into ``num_shards`` balanced strips per ``policy``."""
     if policy == "contiguous":
         return split_contiguous(samples, num_shards)
-    if policy == "token_aware":
+    if policy in ("token_aware", "cluster_aware"):
         if ring is None or preferred is None:
-            raise ValueError("token_aware placement needs a ring and a "
+            raise ValueError(f"{policy} placement needs a ring and a "
                              "preference map")
+        if policy == "cluster_aware" and not hasattr(ring, "owner_of"):
+            raise ValueError("cluster_aware placement needs a federated ring "
+                             "(one with an owner_of(key) ownership map)")
+        # cluster_aware IS the token-aware greedy split — run over a
+        # FederatedRing, whose replicas() already restricts each key to its
+        # owning cluster, it prefers same-region cluster then replica-local
+        # node by construction.
         return split_token_aware(samples, num_shards, ring, rf, preferred)
     raise ValueError(f"unknown placement policy {policy!r} "
                      f"(choose from {PLACEMENT_POLICIES})")

@@ -14,6 +14,27 @@ Both support the *incremental ramp* (staggered buffer filling): instead of
 front-loading k batches of requests at t=0 (bursting the network to k× the
 steady rate), request one extra batch every ``ramp_every`` consumed — a
 transient of only +1/ramp_every (25% for the paper's value of 4).
+
+Sharding / restart invariants carried by ``EpochPlan`` (property-tested in
+``tests/test_resharding.py``; the multi-host and federation layers build on
+them, see ``core/multihost.py``):
+
+* **Contiguous-strip-of-shuffle** — with ``num_shards > 1`` every host
+  computes the same global shuffle (seeded by ``(seed, num_shards)``) and
+  takes its *contiguous strip* of it; strips are disjoint, jointly cover
+  the dataset, and differ in size by at most one.  Never a strided slice
+  of the raw uuid list — strides of an unshuffled list are biased samples.
+* **Exactly-once per epoch** — each epoch delivers every dataset uuid
+  exactly once across all shards.  Per-epoch *overrides* preserve this
+  through elastic N->M resizes: ``compute_reflow`` collects every epoch's
+  undelivered tail at a coordinated checkpoint boundary, the placement
+  policy splits each tail into M balanced strips, and those strips pin the
+  transition epochs of the M fresh plans; later epochs fall back to plain
+  M-host strips (indistinguishable from a fresh M-host run).
+* **M == N bit-identity** — restoring onto the same shard count with the
+  same strip-defining metadata replays the identical per-epoch
+  permutations; ``advance`` is the exact (epoch, cursor) odometer even
+  when override epochs have different lengths.
 """
 
 from __future__ import annotations

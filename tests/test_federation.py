@@ -1,0 +1,343 @@
+"""Multi-cluster federation: ownership, cluster-aware placement, WAN
+accounting, cluster-level outage degradation, checkpoint/restore across
+federations.
+
+Delivery-audit tests use the in-order/low-latency configuration so exact
+uuid streams can be asserted; the outage tests use hedging + OOO to cover
+the failover machinery under realistic conditions.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ClusterSpec, FederatedCluster, FederatedRing,
+                        KVStore, MultiHostConfig, MultiHostRun,
+                        federated_preferred_subsets)
+from repro.core.kvstore import make_uuid
+from repro.core.netsim import VirtualClock
+from repro.core.placement import replica_local_fraction, split_strips
+from repro.data.datasets import SyntheticImageDataset, ingest
+
+SPECS = (ClusterSpec("us", route="local", n_nodes=4, replication_factor=2),
+         ClusterSpec("eu", route="high", n_nodes=4, replication_factor=2))
+
+
+@pytest.fixture(scope="module")
+def store_uuids():
+    store = KVStore()
+    uuids = ingest(store, SyntheticImageDataset(n_samples=8_000, seed=5))
+    return store, uuids
+
+
+def _fed_cfg(n_hosts, **kw):
+    defaults = dict(n_hosts=n_hosts, batch_size=100, prefetch_buffers=4,
+                    io_threads=4, hedge_after=1.0, seed=13,
+                    placement="cluster_aware", clusters=SPECS)
+    defaults.update(kw)
+    return MultiHostConfig(**defaults)
+
+
+def _fast_cfg(n_hosts, **kw):
+    """In-order + no hedging: delivery order == plan order, auditable."""
+    fast = dict(out_of_order=False, hedge_after=None)
+    fast.update(kw)
+    return _fed_cfg(n_hosts, **fast)
+
+
+def _collector(delivered):
+    def on_batch(host_id, batch):
+        delivered.setdefault(batch.epoch, []).extend(
+            str(u) for u in batch.uuids)
+    return on_batch
+
+
+def _uuids(n, seed=7):
+    rng = np.random.default_rng(seed)
+    return [make_uuid(rng) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Ownership map + federated ring
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 300), w1=st.integers(1, 4), w2=st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_ownership_is_deterministic_and_weighted(n, w1, w2):
+    """Every key has exactly one owner; shares follow the declared weights;
+    the map is a pure function of the ring metadata (checkpoint-rebuildable)."""
+    meta = [{"name": "a", "n_nodes": 2, "ring_seed": 3, "rf": 1, "weight": w1},
+            {"name": "b", "n_nodes": 3, "ring_seed": 4, "rf": 2, "weight": w2}]
+    ring = FederatedRing.from_metadata(meta)
+    rebuilt = FederatedRing.from_metadata(ring.metadata())
+    uuids = _uuids(n)
+    owners = [ring.owner_of(u) for u in uuids]
+    assert all(o in ("a", "b") for o in owners)
+    assert owners == [rebuilt.owner_of(u) for u in uuids]
+    assert [ring.replicas(u) for u in uuids] == [rebuilt.replicas(u)
+                                                for u in uuids]
+    if n >= 200:       # md5 tokens are uniform: shares track the weights
+        frac_a = owners.count("a") / n
+        assert abs(frac_a - w1 / (w1 + w2)) < 0.15
+
+
+def test_replicas_stay_in_owning_cluster_with_member_rf():
+    meta = [{"name": "us", "n_nodes": 4, "ring_seed": 1, "rf": 2, "weight": 1},
+            {"name": "eu", "n_nodes": 3, "ring_seed": 2, "rf": 1, "weight": 1}]
+    ring = FederatedRing.from_metadata(meta)
+    rf_by = {"us": 2, "eu": 1}
+    for u in _uuids(80):
+        owner = ring.owner_of(u)
+        reps = ring.replicas(u, rf=3)       # rf arg ignored: member rf rules
+        assert len(reps) == rf_by[owner]
+        assert all(r.startswith(f"{owner}/") for r in reps)
+
+
+def test_federation_validation():
+    clock, store = VirtualClock(), KVStore()
+    with pytest.raises(ValueError):
+        FederatedCluster(clock, store, ())                     # empty
+    with pytest.raises(ValueError):
+        FederatedCluster(clock, store, (ClusterSpec("a"), ClusterSpec("a")))
+    with pytest.raises(ValueError):
+        FederatedCluster(clock, store, (ClusterSpec("a/b"),))  # reserved '/'
+    with pytest.raises(ValueError):
+        FederatedRing.from_metadata([{"name": "a", "n_nodes": 1,
+                                      "ring_seed": 0, "rf": 1, "weight": 0}])
+
+
+def test_cluster_aware_placement_requires_federation(store_uuids):
+    store, uuids = store_uuids
+    cfg = MultiHostConfig(n_hosts=2, placement="cluster_aware")
+    with pytest.raises(ValueError):
+        MultiHostRun(store, uuids[:200], cfg)
+
+
+def test_federated_preferred_subsets_span_every_cluster():
+    by_cluster = {"us": [f"us/node{i}" for i in range(4)],
+                  "eu": [f"eu/node{i}" for i in range(3)]}
+    for n_hosts in (1, 2, 3, 5, 8):
+        subsets = federated_preferred_subsets(by_cluster, n_hosts)
+        assert len(subsets) == n_hosts
+        # every host prefers at least one node in every member cluster, so
+        # no host ends up with an all-WAN or all-local strip
+        for s in subsets:
+            assert any(n.startswith("us/") for n in s)
+            assert any(n.startswith("eu/") for n in s)
+        # and jointly the hosts prefer every node somewhere
+        assert set().union(*map(set, subsets)) == \
+            set(by_cluster["us"]) | set(by_cluster["eu"])
+
+
+def test_cluster_aware_split_balanced_and_replica_local():
+    meta = [{"name": "us", "n_nodes": 4, "ring_seed": 1, "rf": 2, "weight": 1},
+            {"name": "eu", "n_nodes": 4, "ring_seed": 2, "rf": 2, "weight": 1}]
+    ring = FederatedRing.from_metadata(meta)
+    uuids = _uuids(400)
+    pref = federated_preferred_subsets(
+        {m["name"]: [f"{m['name']}/node{i}" for i in range(m["n_nodes"])]
+         for m in meta}, 4)
+    strips = split_strips(uuids, 4, "cluster_aware", ring=ring, rf=0,
+                          preferred=pref)
+    sizes = [len(s) for s in strips]
+    assert sum(sizes) == 400 and max(sizes) - min(sizes) <= 1
+    flat = [str(u) for s in strips for u in s]
+    assert len(flat) == len(set(flat)) == 400
+    assert replica_local_fraction(strips, ring, 0, pref) > 0.9
+
+
+def test_cluster_aware_split_rejects_plain_ring():
+    from repro.core.cluster import TokenRing
+    ring = TokenRing(["node0", "node1"])
+    with pytest.raises(ValueError):
+        split_strips(_uuids(10), 2, "cluster_aware", ring=ring,
+                     rf=1, preferred=[("node0",), ("node1",)])
+
+
+# ---------------------------------------------------------------------------
+# Federated runs: delivery, checkpoints, elasticity
+# ---------------------------------------------------------------------------
+
+def test_federated_run_exactly_once_per_epoch(store_uuids):
+    store, uuids = store_uuids
+    small = uuids[:1200]
+    delivered: dict = {}
+    run = MultiHostRun(store, small, _fast_cfg(2)).start()
+    run.run(12, on_batch=_collector(delivered))          # 2 full epochs
+    universe = {str(u) for u in small}
+    for epoch in (0, 1):
+        assert len(delivered[epoch]) == 1200
+        assert set(delivered[epoch]) == universe
+
+
+def test_federated_report_breaks_out_clusters(store_uuids):
+    store, uuids = store_uuids
+    rep = MultiHostRun(store, uuids[:2000], _fast_cfg(2)).run(4)
+    share = rep["per_cluster_egress_share"]
+    assert set(share) == {"us", "eu"}
+    assert sum(share.values()) == pytest.approx(1.0)
+    assert 0.0 < rep["wan_bytes_share"] < 1.0
+    assert rep["wan_bytes_share"] == pytest.approx(share["eu"])
+    assert rep["cluster_failovers"] == 0                 # no outage
+    crep = rep["cluster_report"]
+    assert crep["us"]["wan"] == 0.0 and crep["eu"]["wan"] == 1.0
+    assert crep["eu"]["route"] == "high"
+    # replica-local routing: cluster-aware placement concentrates each
+    # host's traffic on its preferred nodes
+    assert rep["replica_local_hit_frac"] > 0.9
+    # per-node report uses qualified names across both clusters
+    assert set(rep["cluster_load"]) == set(
+        f"{c}/node{i}" for c in ("us", "eu") for i in range(4))
+
+
+def test_federated_checkpoint_roundtrip_same_n(store_uuids):
+    """Same-N restore of a federated checkpoint is bit-identical to the
+    uninterrupted continuation (M == N bit-identity across a federation)."""
+    store, uuids = store_uuids
+    small = uuids[:1500]
+    cfg = _fast_cfg(3)
+    unbroken: dict = {}
+    run = MultiHostRun(store, small, cfg).start()
+    run.run(2, on_batch=_collector(unbroken))
+    ck = run.checkpoint()
+    assert ck["federation"] == run.federation.ring.metadata()
+    continued: dict = {}
+    run.run(3, on_batch=_collector(continued))
+
+    resumed: dict = {}
+    MultiHostRun(store, small, cfg).start(ck).run(
+        3, on_batch=_collector(resumed))
+    assert resumed == continued
+
+
+@pytest.mark.parametrize("old_n,new_n", [(2, 4), (3, 2)])
+def test_federated_elastic_restore_exactly_once(store_uuids, old_n, new_n):
+    # parametrizations keep reflowed strip sizes divisible by the batch
+    # size: the audit attributes whole batches to batch.epoch, so a batch
+    # must never straddle an epoch boundary
+    store, uuids = store_uuids
+    small = uuids[:1200]
+    delivered: dict = {}
+    run = MultiHostRun(store, small, _fast_cfg(old_n)).start()
+    run.run(2, on_batch=_collector(delivered))
+    ck = run.checkpoint()
+
+    restore = MultiHostRun(store, small, _fast_cfg(new_n)).start(ck)
+    remaining = 1200 - old_n * 2 * 100
+    rounds = -(-(remaining + 1200) // (new_n * 100))     # rest of e0 + all e1
+    restore.run(rounds, on_batch=_collector(delivered))
+    universe = {str(u) for u in small}
+    for epoch in (0, 1):
+        assert len(delivered[epoch]) == 1200
+        assert set(delivered[epoch]) == universe
+
+
+def test_federation_change_triggers_reshard_not_stale_cursors(store_uuids):
+    """Same host count but a *different federation* (extra member, different
+    weights): cursors must not be applied to different strips — the restore
+    reflows, and exactly-once still holds."""
+    store, uuids = store_uuids
+    small = uuids[:1200]
+    delivered: dict = {}
+    run = MultiHostRun(store, small, _fast_cfg(2)).start()
+    run.run(2, on_batch=_collector(delivered))
+    ck = run.checkpoint()
+
+    other_specs = SPECS + (ClusterSpec("ap", route="med", n_nodes=2,
+                                       replication_factor=1),)
+    restore = MultiHostRun(store, small,
+                           _fast_cfg(2, clusters=other_specs)).start(ck)
+    restore.run(4 + 6, on_batch=_collector(delivered))   # rest of e0 + e1
+    universe = {str(u) for u in small}
+    for epoch in (0, 1):
+        assert len(delivered[epoch]) == 1200
+        assert set(delivered[epoch]) == universe
+
+
+def test_contiguous_federated_checkpoint_restores_on_plain_cluster(store_uuids):
+    """Contiguous strips don't depend on the topology at all, so a federated
+    contiguous checkpoint resumes cursor-exact on a single-cluster run."""
+    store, uuids = store_uuids
+    cfg = _fast_cfg(2, placement="contiguous")
+    run = MultiHostRun(store, uuids[:1000], cfg).start()
+    run.run(2)
+    ck = run.checkpoint()
+    plain = MultiHostConfig(n_hosts=2, batch_size=100, prefetch_buffers=4,
+                            io_threads=4, seed=13, out_of_order=False,
+                            hedge_after=None, route="low")
+    restored = MultiHostRun(store, uuids[:1000], plain).start(ck)
+    for ld, s in zip(restored.loaders, ck["shards"]):
+        assert ld.state() == {"epoch": s["epoch"], "cursor": s["cursor"],
+                              "consumed": 0}
+
+
+# ---------------------------------------------------------------------------
+# Cluster-level outage: degradation to the replica cluster
+# ---------------------------------------------------------------------------
+
+def test_cluster_outage_degrades_to_replica_cluster(store_uuids):
+    store, uuids = store_uuids
+    small = uuids[:1200]
+    delivered: dict = {}
+    # in-order so the delivery audit can attribute batches to epochs (the
+    # OOO window legitimately blurs epoch boundaries); hedging + the
+    # cluster-failover path are still fully exercised
+    run = MultiHostRun(store, small, _fed_cfg(2, out_of_order=False)).start()
+    run.run(1, on_batch=_collector(delivered))
+    served_before = sum(n.requests_served
+                       for n in run.federation.clusters["eu"].nodes.values())
+    run.inject_cluster_outage("eu", after=0.0)
+    rep = run.run(5, on_batch=_collector(delivered))     # finishes epoch 0
+    # all reads now come from the surviving cluster...
+    assert rep["cluster_failovers"] > 0
+    assert all(v["down"] == 1.0 for name, v in rep["cluster_load"].items()
+               if name.startswith("eu/"))
+    served_after = sum(n.requests_served
+                      for n in run.federation.clusters["eu"].nodes.values())
+    assert served_after == served_before
+    # ...and delivery is still exactly-once for the epoch
+    assert len(delivered[0]) == len(set(delivered[0])) == 1200
+
+
+def test_cluster_outage_recovery_restores_owner_routing(store_uuids):
+    store, uuids = store_uuids
+    run = MultiHostRun(store, uuids[:2000],
+                       _fed_cfg(2, out_of_order=True)).start()
+    run.inject_cluster_outage("eu", after=0.1, recover_after=1.0)
+    # step_time stretches virtual time past the recovery point (pure
+    # tight-loop rounds complete in well under a virtual second)
+    run.run(8, step_time=0.25)
+    rep = run.run(4, step_time=0.25)   # well past recovery: owner routing is back
+    assert all(v["down"] == 0.0 for v in rep["cluster_load"].values())
+    assert rep["per_cluster_egress_share"]["eu"] > 0.2
+
+
+def test_outage_failover_does_not_double_count(store_uuids):
+    """When the exhausted-hook hands a request to the replica cluster, the
+    owner pool's fetch is marked done — the hedge timer must not re-issue it
+    into the dead cluster and complete it a second time (regression: the
+    once-guard ate the duplicate delivery but bytes/requests/failovers were
+    double-counted, inflating the degraded-window throughput reports)."""
+    store, uuids = store_uuids
+    run = MultiHostRun(store, uuids[:1200],
+                       _fed_cfg(2, out_of_order=True)).start()
+    run.run(1)
+    run.inject_cluster_outage("eu", after=0.0)
+    # step_time stretches virtual time past the hedge timers of the fetches
+    # that were in flight at the outage — the cascade that used to re-issue
+    # them into the dead cluster (pre-fix this scenario shows ~96 duplicates)
+    run.run(5, step_time=0.5)
+    assert sum(ld.pool.duplicates_suppressed for ld in run.loaders) == 0
+
+
+def test_total_blackout_times_out_not_hangs(store_uuids):
+    # tiny config: every stuck fetch retries each backoff interval, so the
+    # in-flight count times the virtual timeout bounds the event volume
+    store, uuids = store_uuids
+    run = MultiHostRun(store, uuids[:100],
+                       _fed_cfg(1, out_of_order=True, batch_size=20,
+                                prefetch_buffers=1, io_threads=1)).start()
+    run.inject_cluster_outage("us", after=0.0)
+    run.inject_cluster_outage("eu", after=0.0)
+    with pytest.raises(TimeoutError):
+        run.run(3, timeout=2.0)

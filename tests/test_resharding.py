@@ -12,6 +12,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cluster import TokenRing
+from repro.core.federation import FederatedRing, federated_preferred_subsets
 from repro.core.kvstore import make_uuid
 from repro.core.placement import (global_order, preferred_node_subsets,
                                   replica_local_fraction, split_contiguous,
@@ -136,6 +137,60 @@ def test_reflow_composes_across_multi_epoch_transition():
         flat = [str(u) for u in pre1 + pre2 + post]
         assert len(flat) == 7
         assert set(flat) == universe
+
+
+def _fed_ring(seed=5):
+    """A 2-cluster federation keyspace (local + intercontinental shape),
+    rebuilt purely from metadata — the same path elastic restores use."""
+    meta = [{"name": "us", "n_nodes": 3, "ring_seed": seed, "rf": 2,
+             "weight": 2},
+            {"name": "eu", "n_nodes": 2, "ring_seed": seed + 1, "rf": 1,
+             "weight": 1}]
+    return FederatedRing.from_metadata(meta), {
+        m["name"]: [f"{m['name']}/node{i}" for i in range(m["n_nodes"])]
+        for m in meta}
+
+
+@given(n=st.integers(1, 90), old_n=st.integers(1, 8), new_n=st.integers(1, 8),
+       seed=st.integers(0, 99), consumed=st.integers(0, 150))
+@settings(max_examples=30, deadline=None)
+def test_reflow_exactly_once_across_federation(n, old_n, new_n, seed,
+                                               consumed):
+    """Exactly-once-per-epoch through an N->M resize when the keyspace spans
+    a 2-cluster federation and both the old and the new strips are carved
+    cluster-aware: pre-checkpoint deliveries + reflowed strips cover every
+    uuid exactly once for every transition epoch and the first steady one."""
+    old_n, new_n = min(old_n, n), min(new_n, n)
+    uuids = _uuids(n)
+    universe = {str(u) for u in uuids}
+    ring, names_by_cluster = _fed_ring()
+
+    def plans_for(m):
+        pref = federated_preferred_subsets(names_by_cluster, m)
+        split = lambda s: split_strips(s, m, "cluster_aware", ring=ring,
+                                       rf=0, preferred=pref)
+        steady = split(global_order(uuids, seed, m))
+        return [EpochPlan.from_samples(steady[j], seed, j, m)
+                for j in range(m)], split
+
+    old_plans, _ = plans_for(old_n)
+    positions = [p.advance(0, 0, consumed) for p in old_plans]
+    e_start, tails = compute_reflow(old_plans, positions)
+    new_plans, split = plans_for(new_n)
+    for epoch, tail in tails.items():
+        for plan, strip in zip(new_plans, split(tail)):
+            plan.install_overrides({epoch: strip})
+
+    for epoch in range(e_start, max(tails) + 2):
+        pre = [u for plan, pos in zip(old_plans, positions)
+               for u in _delivered_before(plan, pos, epoch)]
+        post_strips = [plan.permutation(epoch) for plan in new_plans]
+        post = [u for strip in post_strips for u in strip]
+        flat = [str(u) for u in pre + post]
+        assert len(flat) == n
+        assert set(flat) == universe
+        sizes = sorted(len(s) for s in post_strips)
+        assert sizes[-1] - sizes[0] <= 1
 
 
 @given(n=st.integers(2, 90), old_n=st.integers(1, 8), new_n=st.integers(1, 8),

@@ -1,0 +1,90 @@
+#!/usr/bin/env python3
+"""Docs lint: fail on broken intra-repo links in the markdown docs.
+
+Checks every ``[text](target)`` and ``![alt](target)`` in ``README.md`` and
+``docs/*.md`` (plus any extra files passed as arguments):
+
+* external links (``http(s)://``, ``mailto:``) are skipped;
+* pure in-page anchors (``#section``) are skipped;
+* everything else is resolved relative to the containing file (fragments
+  stripped) and must exist inside the repository.
+
+Exit code 0 = clean, 1 = broken links (each one listed).  Run from anywhere:
+
+    python tools/docs_lint.py [extra.md ...]
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+# [text](target) and ![alt](target); target ends at the first unescaped ')'
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def iter_links(path: Path):
+    """Yield (line_number, raw_target) for every markdown link in ``path``,
+    skipping fenced code blocks (``` ... ```)."""
+    in_fence = False
+    for lineno, line in enumerate(path.read_text().splitlines(), start=1):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK_RE.finditer(line):
+            yield lineno, m.group(1)
+
+
+def check_file(path: Path):
+    """Return ``(broken_links, total_links)`` for one markdown file."""
+    broken = []
+    n_links = 0
+    for lineno, target in iter_links(path):
+        n_links += 1
+        if target.startswith(_EXTERNAL) or target.startswith("#"):
+            continue
+        resolved = (path.parent / target.split("#", 1)[0]).resolve()
+        try:
+            resolved.relative_to(REPO_ROOT)
+        except ValueError:
+            broken.append((lineno, target, "escapes the repository"))
+            continue
+        if not resolved.exists():
+            broken.append((lineno, target, "does not exist"))
+    return broken, n_links
+
+
+def main(argv: list) -> int:
+    files = [REPO_ROOT / "README.md"]
+    files += sorted((REPO_ROOT / "docs").glob("*.md"))
+    files += [Path(a).resolve() for a in argv]
+    missing_inputs = [f for f in files if not f.exists()]
+    if missing_inputs:
+        for f in missing_inputs:
+            print(f"docs-lint: input file missing: {f}")
+        return 1
+    n_links = 0
+    failures = 0
+    for f in files:
+        broken, file_links = check_file(f)
+        n_links += file_links
+        try:
+            shown = f.relative_to(REPO_ROOT)
+        except ValueError:
+            shown = f
+        for lineno, target, why in broken:
+            print(f"{shown}:{lineno}: broken link '{target}' ({why})")
+            failures += 1
+    print(f"docs-lint: {len(files)} files, {n_links} links, "
+          f"{failures} broken")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
