@@ -7,6 +7,9 @@ from .connection import ConnectionPool, FetchResult
 from .federation import (ClusterSpec, FederatedCluster,
                          FederatedConnectionPool, FederatedRing,
                          federated_preferred_subsets)
+from .flowctl import (FlowControlConfig, FlowController,
+                      FlowControllerGroup, SharedIngressLimiter,
+                      merge_snapshots)
 from .kvstore import DataRow, KVStore, MetaRow, make_uuid, token_of
 from .loader import CassandraLoader, LoaderConfig, consume_with_step_time, tight_loop
 from .multihost import MultiHostConfig, MultiHostRun
@@ -23,7 +26,9 @@ __all__ = [
     "AssembledBatch", "BatchAssembler", "Cluster", "TokenRing",
     "ConnectionPool", "FetchResult", "ClusterSpec", "FederatedCluster",
     "FederatedConnectionPool", "FederatedRing",
-    "federated_preferred_subsets", "DataRow", "KVStore", "MetaRow",
+    "federated_preferred_subsets", "FlowControlConfig", "FlowController",
+    "FlowControllerGroup", "SharedIngressLimiter", "merge_snapshots",
+    "DataRow", "KVStore", "MetaRow",
     "make_uuid", "token_of", "CassandraLoader", "LoaderConfig",
     "MultiHostConfig", "MultiHostRun",
     "consume_with_step_time", "tight_loop", "BACKENDS", "CASSANDRA", "SCYLLA",

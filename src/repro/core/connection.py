@@ -20,6 +20,8 @@ from typing import Callable, Dict, Iterable, List, Optional
 import numpy as np
 
 from .cluster import Cluster
+from .flowctl import (FlowControlConfig, FlowController,
+                      SharedIngressLimiter)
 from .kvstore import DataRow
 from .netsim import Clock, RateResource, RouteProfile, SimConnection, TIERS, NIC_BANDWIDTH
 
@@ -84,6 +86,21 @@ class ConnectionPool:
         self.bytes_received = 0
         self.failovers = 0
         self.served_by_node: Dict[str, int] = {}
+        # Adaptive flow control (core/flowctl.py): when attached, every
+        # completion feeds an RTT + delivery-rate sample and every
+        # failover/hedge a loss-style signal.  None = static prefetch depth.
+        self.controller: Optional[FlowController] = None
+
+    def attach_flow_control(self, cfg: FlowControlConfig, batch_size: int,
+                            limiter: Optional[SharedIngressLimiter] = None
+                            ) -> FlowController:
+        """Create (once) and attach the BDP-tracking controller this pool
+        feeds; returns the attached controller on repeat calls."""
+        if self.controller is None:
+            self.controller = FlowController(cfg, batch_size, self.clock,
+                                             name=self.route.name,
+                                             limiter=limiter)
+        return self.controller
 
     # -- routing ---------------------------------------------------------
     def _pick_connection(self, key: _uuid.UUID,
@@ -135,6 +152,8 @@ class ConnectionPool:
                 return  # a hedge lost the race
             state["done"] = True
             self.bytes_received += row.size
+            if self.controller is not None:
+                self.controller.on_complete(t0, t_done, row.size)
             name = conn.node_name
             self.served_by_node[name] = self.served_by_node.get(name, 0) + 1
             payload = row.materialize() if self.materialize else row.payload
@@ -149,6 +168,8 @@ class ConnectionPool:
                 if state["done"]:
                     return  # the other (hedged) attempt already answered
                 self.failovers += 1
+                if self.controller is not None:
+                    self.controller.on_failure()
                 now_tried = tried | {conn}
                 nxt = self._pick_connection(key, exclude=now_tried)
                 if nxt in now_tried:
@@ -178,6 +199,8 @@ class ConnectionPool:
             def maybe_hedge() -> None:
                 if state["done"]:
                     return
+                if self.controller is not None:
+                    self.controller.on_hedge()
                 backup = self._pick_connection(key, exclude=(first,))
                 attempt(backup, True, frozenset({first}))
 

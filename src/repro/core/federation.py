@@ -63,6 +63,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .cluster import Cluster, TokenRing
 from .connection import ConnectionPool
+from .flowctl import (FlowControlConfig, FlowControllerGroup,
+                      SharedIngressLimiter)
 from .kvstore import KVStore, token_of
 from .netsim import (DISK_BANDWIDTH, NIC_BANDWIDTH, Clock, RateResource,
                      RouteProfile, TIERS)
@@ -366,6 +368,10 @@ class FederatedConnectionPool:
                                     client_ingress_bandwidth)
         self.cluster_failovers = 0         # fetches served off-owner
         self.duplicates_suppressed = 0     # late completions the once-guard ate
+        # Adaptive flow control: one FlowController per member cluster (each
+        # fed by that member's sub-pool over that member's route), summed
+        # into the host budget by a FlowControllerGroup.
+        self.controller: Optional[FlowControllerGroup] = None
         preferred = list(preferred_nodes or ())
         self.pools: Dict[str, ConnectionPool] = {}
         for i, spec in enumerate(federation.specs):
@@ -381,6 +387,22 @@ class FederatedConnectionPool:
                 preferred_nodes=local_pref or None,
                 ingress=self.ingress,
                 on_exhausted=self._make_exhausted(spec.name))
+
+    def attach_flow_control(self, cfg: FlowControlConfig, batch_size: int,
+                            limiter: Optional[SharedIngressLimiter] = None
+                            ) -> FlowControllerGroup:
+        """One BDP-tracking controller per member cluster — a 150 ms WAN
+        member ramps deep while a local member stays shallow — summed into
+        the host's in-flight budget.  Idempotent."""
+        if self.controller is None:
+            members = {}
+            for name, pool in self.pools.items():
+                ctl = pool.attach_flow_control(cfg, batch_size,
+                                               limiter=limiter)
+                ctl.name = name            # report by member, not route tier
+                members[name] = ctl
+            self.controller = FlowControllerGroup(members, batch_size)
+        return self.controller
 
     # -- fetch --------------------------------------------------------------
     def fetch(self, key: _uuid.UUID,

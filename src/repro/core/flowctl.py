@@ -1,0 +1,498 @@
+"""Adaptive flow control: a BDP-tracking in-flight budget per route.
+
+The paper hides network latency with a *fixed* prefetch depth ``k`` plus a
+fixed incremental ramp — which is only right when the operator hand-tunes
+``k`` to the route's bandwidth-delay product.  One static ``num_buffers``
+cannot serve a federation mixing 0.05 ms local routes with 150 ms
+intercontinental ones, so this module *measures* the depth instead, in the
+style of rate-based congestion control (BBR's min-RTT/max-rate filters, TCP's
+slow start and AIMD):
+
+Signals in (fed by ``ConnectionPool`` / ``FederatedConnectionPool``):
+
+* per-fetch completion — an RTT sample (``t_done - t_issued``: propagation +
+  service + transfer + every queue on the way) and a delivery event for the
+  windowed rate estimate (via the shared :func:`repro.core.stats
+  .windowed_series` aggregation);
+* failovers and hedge fires — loss-style congestion signals.
+
+Budget out (consumed by the prefetchers' ``_target_depth``):
+
+* ``bdp = max_delivery_rate x min_rtt`` over sliding filter windows;
+* **slow start** — the probe cap starts at the floor and grows by one sample
+  per completion (≈ doubling per RTT, exactly TCP slow start) until the BDP
+  estimate takes over or a congestion signal arrives;
+* **AIMD** — queueing-delay inflation (smoothed RTT above
+  ``rtt_inflation x min_rtt``), a failover or a hedge multiplies the cap by
+  ``beta``, with a one-RTT cooldown so a single event backs off once;
+  afterwards the cap regrows additively (+1 batch per RTT);
+* ``budget = clamp(min(gain x bdp, probe_cap, fair_cap), floor, ceiling)``
+  in samples — the floor is one batch (the out-of-order assembler cannot
+  make progress below that), the ceiling bounds worst-case buffering, and
+  ``fair_cap`` is the :class:`SharedIngressLimiter` share when several
+  consumers sit behind one client NIC.
+
+``FlowControllerGroup`` runs one controller per member cluster of a
+federation — each fed by that member's sub-pool over that member's route —
+and exposes their *sum* as the host's budget, so a 150 ms WAN route ramps
+deep while the local route stays shallow.
+
+Controller state snapshots ride the multi-host checkpoint
+(:meth:`FlowController.snapshot` / :meth:`restore`,
+:func:`merge_snapshots`), so an elastic N->M restore re-seeds the measured
+rate/RTT instead of re-slow-starting from the floor.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional
+
+from .stats import windowed_series
+
+
+@dataclass(frozen=True)
+class FlowControlConfig:
+    """Knobs of the BDP-tracking controller (sane for every route tier)."""
+
+    floor_batches: int = 1        # min budget: one batch keeps assembly alive
+    ceiling_batches: int = 64     # hard cap on in-flight batches
+    gain: float = 1.75            # budget = gain x BDP estimate; the
+    # headroom covers per-connection rate heterogeneity (a min-RTT x
+    # max-rate BDP is what the *best* connection needs; stragglers need
+    # slack) while staying under the 2x no-over-buffering bound
+    beta: float = 0.7             # multiplicative decrease on congestion
+    rtt_inflation: float = 2.0    # smoothed-RTT backoff threshold (x min_rtt)
+    rate_window: float = 0.25     # delivery-rate bucket width, seconds
+    rate_buckets: int = 8         # max-filter horizon, in buckets
+    rtt_window: float = 10.0      # min-RTT filter horizon, seconds
+    # BBR-style PROBE_RTT: with gain > 1 a standing queue can inflate every
+    # RTT sample (the min filter never sees the drained route), which feeds
+    # back into the BDP estimate.  Periodically drop the budget to the floor
+    # for ~2 RTTs so the queue drains and min-RTT re-anchors to the wire.
+    probe_rtt_interval: float = 5.0
+
+    def __post_init__(self) -> None:
+        if self.floor_batches < 1:
+            raise ValueError(f"floor_batches must be >= 1, "
+                             f"got {self.floor_batches}")
+        if self.ceiling_batches < self.floor_batches:
+            raise ValueError(f"ceiling_batches ({self.ceiling_batches}) must "
+                             f"be >= floor_batches ({self.floor_batches})")
+        if self.gain <= 0.0:
+            raise ValueError(f"gain must be positive, got {self.gain}")
+        if not 0.0 < self.beta < 1.0:
+            raise ValueError(f"beta must be in (0, 1), got {self.beta}")
+        if self.rtt_inflation <= 1.0:
+            raise ValueError(f"rtt_inflation must be > 1, "
+                             f"got {self.rtt_inflation}")
+        if self.rate_window <= 0.0 or self.rtt_window <= 0.0:
+            raise ValueError("rate_window and rtt_window must be positive")
+        if self.rate_buckets < 2:
+            raise ValueError(f"rate_buckets must be >= 2, "
+                             f"got {self.rate_buckets}")
+        if self.probe_rtt_interval <= 0.0:
+            raise ValueError(f"probe_rtt_interval must be positive, "
+                             f"got {self.probe_rtt_interval}")
+
+
+class SharedIngressLimiter:
+    """Fair-share cap for controllers whose consumers share one client NIC.
+
+    Each registered controller's budget is additionally capped at
+    ``gain x (bandwidth / n_members) x min_rtt`` worth of samples — its
+    fair-share bandwidth-delay product — so N hosts on one ingress converge
+    to ~1/N shares instead of the deepest-buffered host starving the rest.
+    """
+
+    def __init__(self, bandwidth: float) -> None:
+        if bandwidth <= 0.0:
+            raise ValueError(f"bandwidth must be positive, got {bandwidth}")
+        self.bandwidth = bandwidth
+        self._members: List["FlowController"] = []
+
+    def register(self, ctl: "FlowController") -> None:
+        if ctl not in self._members:
+            self._members.append(ctl)
+
+    def fair_cap_samples(self, ctl: "FlowController") -> float:
+        min_rtt = ctl.min_rtt()
+        avg = ctl.avg_sample_bytes()
+        if min_rtt is None or avg is None:
+            return math.inf
+        share = self.bandwidth / max(len(self._members), 1)
+        return ctl.cfg.gain * (share / avg) * min_rtt
+
+
+class FlowController:
+    """Per-route in-flight sample budget driven by measured RTT and rate."""
+
+    def __init__(self, cfg: FlowControlConfig, batch_size: int, clock,
+                 name: str = "route",
+                 limiter: Optional[SharedIngressLimiter] = None) -> None:
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.name = name
+        self._clock = clock
+        self._floor = float(cfg.floor_batches * batch_size)
+        self._ceiling = float(cfg.ceiling_batches * batch_size)
+        self._limiter = limiter
+        if limiter is not None:
+            limiter.register(self)
+        # probe window: slow start from the floor (TCP-style)
+        self._probe_cap = self._floor
+        self._slow_start = True
+        # delivery-rate filter: [bucket_start, completions] aggregates, newest
+        # last; the estimate is the max over *complete* buckets (rate is
+        # budget-limited while ramping, so the max is the best recent proof
+        # of what the route can deliver).
+        self._rate_events: Deque[List[float]] = deque()
+        self._rate_hint: Optional[float] = None     # checkpoint re-seed
+        # min-RTT filter: [bucket_start, min_rtt] aggregates over rtt_window
+        self._rtt_mins: Deque[List[float]] = deque()
+        self._rtt_ema: Optional[float] = None
+        self._min_rtt_hint: Optional[float] = None  # checkpoint re-seed
+        self._avg_bytes: Optional[float] = None
+        self._cooldown_until = -math.inf
+        self._next_probe_rtt = cfg.probe_rtt_interval
+        self._drain_until = -math.inf
+        # counters / traces
+        self.completions = 0
+        self.backoffs = 0                 # RTT-inflation backoffs
+        self.loss_signals = 0             # failover/hedge backoffs
+        self.rtt_probes = 0               # PROBE_RTT drains
+        self.budget_trace: List[tuple] = []   # (t, budget_samples) on change
+
+    # -- signal intake ------------------------------------------------------
+    def on_complete(self, t_issued: float, t_done: float,
+                    nbytes: int) -> None:
+        """One fetch finished: an RTT sample plus a delivery event."""
+        rtt = max(t_done - t_issued, 1e-9)
+        self.completions += 1
+        # min-RTT filter (bucketed so the deque stays bounded on fast routes)
+        width = self.cfg.rtt_window / 4.0
+        b = math.floor(t_done / width) * width
+        if self._rtt_mins and self._rtt_mins[-1][0] == b:
+            self._rtt_mins[-1][1] = min(self._rtt_mins[-1][1], rtt)
+        else:
+            self._rtt_mins.append([b, rtt])
+        while self._rtt_mins[0][0] < t_done - self.cfg.rtt_window:
+            self._rtt_mins.popleft()
+        # smoothed RTT: time constant ~ half an in-flight window, so one
+        # straggling connection's samples can't trigger a backoff alone
+        alpha = min(1.0, 2.0 * self.batch_size
+                    / max(self._budget_raw(ignore_drain=True), 1.0))
+        self._rtt_ema = (rtt if self._rtt_ema is None
+                         else self._rtt_ema + alpha * (rtt - self._rtt_ema))
+        # delivery-rate buckets (t_done is monotone on one clock)
+        w = self.cfg.rate_window
+        rb = math.floor(t_done / w) * w
+        if self._rate_events and self._rate_events[-1][0] == rb:
+            self._rate_events[-1][1] += 1.0
+        else:
+            self._rate_events.append([rb, 1.0])
+            # trim by count AND by age: after a completion gap (outage,
+            # PROBE_RTT drain) stale buckets would otherwise stretch the
+            # rate series across the whole gap until count-eviction catches
+            # up
+            horizon = rb - w * (self.cfg.rate_buckets + 1)
+            while (len(self._rate_events) > self.cfg.rate_buckets + 1
+                   or self._rate_events[0][0] < horizon):
+                self._rate_events.popleft()
+        # average sample size (EMA) for byte<->sample conversions
+        self._avg_bytes = (float(nbytes) if self._avg_bytes is None
+                           else 0.99 * self._avg_bytes + 0.01 * nbytes)
+        # grow the probe window: +1 sample per completion in slow start
+        # (doubles per RTT); +1 batch per RTT afterwards (additive increase)
+        if self._slow_start:
+            self._probe_cap += 1.0
+        else:
+            # ~probe_cap completions arrive per RTT, so +B/probe_cap per
+            # completion compounds to +1 batch per RTT (TCP's MSS/cwnd)
+            self._probe_cap += self.batch_size / max(self._probe_cap, 1.0)
+        self._probe_cap = min(self._probe_cap, self._ceiling)
+        # queueing-delay congestion signal
+        min_rtt = self.min_rtt()
+        if (min_rtt is not None and self._rtt_ema is not None
+                and self._rtt_ema > self.cfg.rtt_inflation * min_rtt
+                and t_done >= self._cooldown_until):
+            self.backoffs += 1
+            self._back_off(t_done, min_rtt)
+        # PROBE_RTT: periodically drain the self-inflicted queue so the
+        # min-RTT filter re-anchors (skipped when already at the floor —
+        # nothing to drain)
+        if t_done >= self._next_probe_rtt and t_done >= self._drain_until:
+            self._next_probe_rtt = t_done + self.cfg.probe_rtt_interval
+            if self._budget_raw(ignore_drain=True) > 1.25 * self._floor:
+                self.rtt_probes += 1
+                self._drain_until = t_done + 2.0 * max(min_rtt or 0.0, 1e-3)
+        self._record()
+
+    def on_failure(self) -> None:
+        """A connection failed over — treat like a loss event."""
+        self._loss_signal()
+
+    def on_hedge(self) -> None:
+        """A hedge fired (straggler past ``hedge_after``) — mild congestion."""
+        self._loss_signal()
+
+    def _loss_signal(self) -> None:
+        now = self._clock.now()
+        if now < self._cooldown_until:
+            return
+        self.loss_signals += 1
+        self._back_off(now, self.min_rtt())
+        self._record()
+
+    def _back_off(self, now: float, min_rtt: Optional[float]) -> None:
+        self._slow_start = False
+        self._probe_cap = max(self.cfg.beta
+                              * self._budget_raw(ignore_drain=True),
+                              self._floor)
+        self._cooldown_until = now + max(min_rtt or 0.0, 1e-3)
+
+    # -- estimates ----------------------------------------------------------
+    def min_rtt(self) -> Optional[float]:
+        if self._rtt_mins:
+            return min(m for _, m in self._rtt_mins)
+        return self._min_rtt_hint
+
+    def delivery_rate(self) -> Optional[float]:
+        """Max windowed delivery rate (samples/s) over complete buckets."""
+        done = [(t, n) for t, n in self._rate_events
+                if t + self.cfg.rate_window <= self._clock.now()]
+        if not done:
+            return self._rate_hint
+        series = windowed_series(done, self.cfg.rate_window, start=done[0][0])
+        return max(rate for _, rate in series)
+
+    def bdp_samples(self) -> Optional[float]:
+        rate, min_rtt = self.delivery_rate(), self.min_rtt()
+        if rate is None or min_rtt is None:
+            return None
+        return rate * min_rtt
+
+    def avg_sample_bytes(self) -> Optional[float]:
+        return self._avg_bytes
+
+    # -- budget -------------------------------------------------------------
+    def _budget_raw(self, ignore_drain: bool = False) -> float:
+        # min(probe, gain x BDP): the probe window rules out an unbounded
+        # burst while the rate filter is still warming up, and the BDP
+        # target rules out over-buffering once it is — the rate estimate
+        # saturates at the true bottleneck, so gain x BDP is self-limiting
+        # even while the probe keeps slow-starting.
+        if not ignore_drain and self._clock.now() < self._drain_until:
+            return self._floor          # PROBE_RTT: drain to re-measure
+        cap = self._probe_cap
+        bdp = self.bdp_samples()
+        if bdp is not None:
+            cap = min(cap, self.cfg.gain * bdp)
+        if self._limiter is not None:
+            cap = min(cap, self._limiter.fair_cap_samples(self))
+        return min(max(cap, self._floor), self._ceiling)
+
+    def budget(self) -> int:
+        """Allowed in-flight samples right now."""
+        return int(self._budget_raw())
+
+    def operating_budget(self) -> int:
+        """The steady operating point — what the budget returns to after a
+        transient PROBE_RTT drain (what reports and snapshots record)."""
+        return int(self._budget_raw(ignore_drain=True))
+
+    def depth(self, batch_size: Optional[int] = None) -> int:
+        """Budget expressed in batches (what ``_target_depth`` consumes)."""
+        b = batch_size or self.batch_size
+        return max(self.cfg.floor_batches,
+                   min(self.cfg.ceiling_batches,
+                       int(math.ceil(self._budget_raw() / b))))
+
+    def _record(self) -> None:
+        b = self.budget()
+        if not self.budget_trace or self.budget_trace[-1][1] != b:
+            self.budget_trace.append((self._clock.now(), b))
+
+    # -- checkpoint ---------------------------------------------------------
+    def snapshot(self) -> Dict:
+        """Epoch-boundary state: everything a restore needs to resume at the
+        measured operating point instead of re-slow-starting."""
+        return {
+            "budget": float(self._budget_raw(ignore_drain=True)),
+            "probe_cap": float(self._probe_cap),
+            "min_rtt": self.min_rtt(),
+            "rate": self.delivery_rate(),
+            "avg_bytes": self._avg_bytes,
+            "backoffs": self.backoffs,
+            "loss_signals": self.loss_signals,
+        }
+
+    def restore(self, state: Optional[Dict]) -> None:
+        if not state:
+            return
+        if "members" in state:
+            # federation-shaped snapshot restored onto a single-route
+            # controller (e.g. a federated checkpoint onto a plain run):
+            # collapse the members — budgets/rates sum, min-RTT is the min
+            state = _collapse_members(state)
+            if not state:
+                return
+        self._probe_cap = min(max(float(state.get("probe_cap")
+                                        or state.get("budget")
+                                        or self._floor),
+                                  self._floor), self._ceiling)
+        self._min_rtt_hint = state.get("min_rtt")
+        self._rate_hint = state.get("rate")
+        if state.get("avg_bytes"):
+            self._avg_bytes = float(state["avg_bytes"])
+        # re-seeded, not fresh: the hints govern until real samples land, and
+        # regrowth is additive (no second slow-start burst on a warm cluster)
+        self._slow_start = False
+        self._record()
+
+    # -- reporting ----------------------------------------------------------
+    def report(self) -> Dict:
+        operating = self.operating_budget()
+        return {
+            "name": self.name,
+            "budget_samples": operating,
+            "depth_batches": max(self.cfg.floor_batches,
+                                 min(self.cfg.ceiling_batches,
+                                     int(math.ceil(operating
+                                                   / self.batch_size)))),
+            "bdp_samples": self.bdp_samples(),
+            "min_rtt_s": self.min_rtt(),
+            "rate_samples_per_s": self.delivery_rate(),
+            "slow_start": self._slow_start,
+            "backoffs": self.backoffs,
+            "loss_signals": self.loss_signals,
+            "rtt_probes": self.rtt_probes,
+            "completions": self.completions,
+        }
+
+
+class FlowControllerGroup:
+    """One controller per member cluster of a federation; the host's budget
+    is their sum, so each route ramps to its own BDP independently."""
+
+    def __init__(self, controllers: Dict[str, FlowController],
+                 batch_size: int) -> None:
+        if not controllers:
+            raise ValueError("a controller group needs at least one member")
+        self.members = dict(controllers)
+        self.batch_size = batch_size
+        first = next(iter(self.members.values()))
+        self.cfg = first.cfg
+
+    def budget(self) -> int:
+        return sum(c.budget() for c in self.members.values())
+
+    def depth(self, batch_size: Optional[int] = None) -> int:
+        b = batch_size or self.batch_size
+        total = sum(c._budget_raw() for c in self.members.values())
+        return max(1, int(math.ceil(total / b)))
+
+    def snapshot(self) -> Dict:
+        return {"members": {name: c.snapshot()
+                            for name, c in self.members.items()}}
+
+    def restore(self, state: Optional[Dict]) -> None:
+        if not state:
+            return
+        if "members" not in state:
+            # plain snapshot restored onto a federation group (e.g. a
+            # single-cluster checkpoint onto a federated run): split the
+            # budget evenly; each member's own samples re-shape it quickly
+            share = _scale_snapshot(state, 1.0 / len(self.members))
+            for ctl in self.members.values():
+                ctl.restore(share)
+            return
+        for name, member_state in (state.get("members") or {}).items():
+            if name in self.members:
+                self.members[name].restore(member_state)
+
+    def report(self) -> Dict:
+        members = {name: c.report() for name, c in self.members.items()}
+        total = sum(m["budget_samples"] for m in members.values())
+        return {
+            "budget_samples": total,
+            "depth_batches": max(1, int(math.ceil(total / self.batch_size))),
+            "members": members,
+        }
+
+
+def _mean(values: List[float]) -> Optional[float]:
+    vals = [v for v in values if v is not None]
+    return sum(vals) / len(vals) if vals else None
+
+
+def _collapse_members(state: Dict) -> Optional[Dict]:
+    """Flatten a federation-shaped snapshot into a single-route one: the
+    summed member budgets seed the probe cap.  No rate hint — a summed rate
+    times the *minimum* member RTT would be a meaningless BDP for
+    heterogeneous routes (WAN rate x local RTT), so the first real rate
+    buckets re-shape the budget instead."""
+    members = [m for m in (state.get("members") or {}).values() if m]
+    if not members:
+        return None
+    total_budget = sum(m.get("budget") or 0.0 for m in members)
+    return {
+        "budget": total_budget,
+        "probe_cap": total_budget,
+        "min_rtt": min((m["min_rtt"] for m in members
+                        if m.get("min_rtt") is not None), default=None),
+        "rate": None,
+        "avg_bytes": _mean([m.get("avg_bytes") for m in members]),
+        "backoffs": 0,
+        "loss_signals": 0,
+    }
+
+
+def _scale_snapshot(state: Dict, factor: float) -> Dict:
+    """Scale the extensive quantities (budget, probe cap, rate) of a plain
+    snapshot; intensive ones (min-RTT, sample size) pass through."""
+    out = dict(state)
+    for key in ("budget", "probe_cap", "rate"):
+        if out.get(key) is not None:
+            out[key] = float(out[key]) * factor
+    return out
+
+
+def merge_snapshots(snapshots: List[Dict], new_count: int) -> Optional[Dict]:
+    """Combine N shards' controller snapshots into the seed for one of M new
+    shards (elastic N->M restore): the cluster-wide in-flight total is
+    conserved (budgets sum, then split M ways), the min-RTT floor is the min
+    over shards, and per-member federation snapshots merge by cluster name.
+    """
+    snapshots = [s for s in snapshots if s]
+    if not snapshots or new_count < 1:
+        return None
+    if "members" in snapshots[0]:
+        names = {n for s in snapshots for n in (s.get("members") or {})}
+        return {"members": {
+            n: merge_snapshots([(s.get("members") or {}).get(n)
+                                for s in snapshots], new_count)
+            for n in names}}
+    scale = len(snapshots) / float(new_count)
+    rates = _mean([s.get("rate") for s in snapshots])
+    return {
+        "budget": _mean([s.get("budget") for s in snapshots]) * scale,
+        "probe_cap": _mean([s.get("probe_cap") or s.get("budget")
+                            for s in snapshots]) * scale,
+        "min_rtt": min((s["min_rtt"] for s in snapshots
+                        if s.get("min_rtt") is not None), default=None),
+        "rate": rates * scale if rates is not None else None,
+        "avg_bytes": _mean([s.get("avg_bytes") for s in snapshots]),
+        "backoffs": 0,
+        "loss_signals": 0,
+    }
+
+
+FLOW_CONTROL_MODES = ("static", "adaptive")
+
+__all__ = ["FlowControlConfig", "FlowController", "FlowControllerGroup",
+           "SharedIngressLimiter", "merge_snapshots", "FLOW_CONTROL_MODES"]

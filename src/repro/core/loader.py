@@ -14,6 +14,7 @@ from typing import List, Optional, Tuple
 
 from .cluster import Cluster
 from .connection import ConnectionPool
+from .flowctl import FlowControlConfig
 from .kvstore import KVStore
 from .netsim import Clock, RealClock, TIERS, VirtualClock
 from .prefetcher import EpochPlan, PrefetchConfig, make_prefetcher
@@ -44,6 +45,11 @@ class LoaderConfig:
     # subset this host's shard keys were replica-skewed toward).  None keeps
     # the unbiased least-loaded-replica routing.
     preferred_nodes: Optional[Tuple[str, ...]] = None
+    # "static" keeps the paper's fixed prefetch depth (default, bit-identical
+    # to pre-flow-control behaviour); "adaptive" wires a BDP-tracking
+    # FlowController (core/flowctl.py) between the pool and the prefetcher.
+    flow_control: str = "static"
+    flow: Optional[FlowControlConfig] = None
 
 
 class CassandraLoader:
@@ -53,7 +59,7 @@ class CassandraLoader:
                  cfg: LoaderConfig, clock: Optional[Clock] = None,
                  cluster: Optional[Cluster] = None,
                  plan: Optional[EpochPlan] = None,
-                 pool=None) -> None:
+                 pool=None, ingress=None, flow_limiter=None) -> None:
         self.cfg = cfg
         self.clock = clock or (VirtualClock() if cfg.virtual_clock else RealClock())
         self.cluster = cluster or Cluster(
@@ -64,13 +70,16 @@ class CassandraLoader:
         # every host computes the same global shuffle.  An externally-built
         # pool (e.g. a FederatedConnectionPool spanning several clusters,
         # each with its own route) replaces the single-route default.
+        # ``ingress`` shares one client NIC across co-located loaders
+        # (multi-host shared_client_ingress); None keeps a private NIC.
         self.pool = pool or ConnectionPool(
             self.clock, self.cluster, TIERS[cfg.route],
             io_threads=cfg.io_threads, conns_per_thread=cfg.conns_per_thread,
             seed=cfg.seed + 11 + 7919 * cfg.shard_id,
             hedge_after=cfg.hedge_after,
             materialize=cfg.materialize,
-            preferred_nodes=cfg.preferred_nodes)
+            preferred_nodes=cfg.preferred_nodes,
+            ingress=ingress)
         # An externally-built plan (placement policies, elastic reflow)
         # overrides the default contiguous-strip sharding.
         self.plan = plan or EpochPlan(uuids, seed=cfg.seed,
@@ -80,9 +89,23 @@ class CassandraLoader:
                               num_buffers=cfg.prefetch_buffers,
                               out_of_order=cfg.out_of_order,
                               incremental_ramp=cfg.incremental_ramp,
-                              ramp_every=cfg.ramp_every)
+                              ramp_every=cfg.ramp_every,
+                              flow_control=cfg.flow_control,
+                              flow=cfg.flow)
+        # Adaptive flow control: the pool measures (RTT + delivery rate per
+        # completion), the controller budgets, the prefetcher obeys.  A pool
+        # that already carries a controller (MultiHostRun's shared-ingress
+        # fairness cap attaches one before building the loader) is reused.
+        self.flow_controller = None
+        if cfg.flow_control == "adaptive":
+            self.flow_controller = (
+                self.pool.controller
+                or self.pool.attach_flow_control(cfg.flow or FlowControlConfig(),
+                                                 cfg.batch_size,
+                                                 limiter=flow_limiter))
         self.prefetcher = make_prefetcher(self.clock, self.pool, self.plan, pcfg,
-                                          real_copy=cfg.materialize)
+                                          real_copy=cfg.materialize,
+                                          controller=self.flow_controller)
 
     # -- iteration ---------------------------------------------------------
     def start(self, epoch: int = 0, cursor: int = 0) -> "CassandraLoader":
@@ -99,6 +122,12 @@ class CassandraLoader:
     # -- checkpointing ------------------------------------------------------
     def state(self) -> dict:
         return self.prefetcher.state()
+
+    def restore_flow(self, state: Optional[dict]) -> None:
+        """Re-seed the flow controller from a checkpoint snapshot (no-op in
+        static mode or when the checkpoint predates flow control)."""
+        if self.flow_controller is not None and state:
+            self.flow_controller.restore(state)
 
     @property
     def stats(self):

@@ -32,6 +32,15 @@ Failure injection (``inject_failure``) takes a ``SimServerNode`` dark
 mid-run; hedged requests plus the connection-pool failover path keep all
 loaders alive through it (requests re-route to live replicas).
 
+Adaptive flow control (``MultiHostConfig.flow_control="adaptive"``,
+``core/flowctl.py``): every host gets its own BDP-tracking controller (one
+per member cluster under a federation), per-shard controller snapshots ride
+``checkpoint()`` (elastic restores merge the N budgets and split them M
+ways instead of re-slow-starting), and ``shared_client_ingress=True`` puts
+all hosts behind one client NIC with a fair-share budget cap so they
+converge to ~1/N shares.  The default ``"static"`` keeps runs bit-identical
+to pre-flow-control behaviour.
+
 Multi-cluster federation (``MultiHostConfig.clusters``): instead of one
 shared cluster, the run spans several storage clusters — each with its own
 token ring, node set, replication factor and WAN route (``core/federation``).
@@ -74,9 +83,11 @@ from .cluster import Cluster, TokenRing
 from .federation import (ClusterSpec, FederatedCluster,
                          FederatedConnectionPool, FederatedRing,
                          federated_preferred_subsets)
+from .flowctl import (FlowControlConfig, SharedIngressLimiter,
+                      merge_snapshots)
 from .kvstore import KVStore
 from .loader import CassandraLoader, LoaderConfig
-from .netsim import DISK_BANDWIDTH, NIC_BANDWIDTH, VirtualClock
+from .netsim import DISK_BANDWIDTH, NIC_BANDWIDTH, RateResource, VirtualClock
 from .placement import (PLACEMENT_POLICIES, global_order,
                         preferred_node_subsets, split_strips)
 from .prefetcher import EpochPlan, compute_reflow
@@ -117,6 +128,18 @@ class MultiHostConfig:
     # replication_factor above, and each host talks to every member over
     # that member's own route via a FederatedConnectionPool.
     clusters: Optional[Tuple[ClusterSpec, ...]] = None
+    # Flow control (core/flowctl.py): "static" keeps the fixed
+    # prefetch_buffers depth (default, bit-identical to pre-flow-control
+    # runs); "adaptive" gives every host its own BDP-tracking controller
+    # (one per member cluster under a federation).
+    flow_control: str = "static"
+    flow: Optional[FlowControlConfig] = None
+    # Shared client ingress: all hosts behind ONE client NIC (co-located
+    # consumers) instead of one NIC per host.  With adaptive flow control a
+    # fairness cap limits each host's budget to its fair-share BDP of that
+    # NIC, so N hosts converge to ~1/N shares.
+    shared_client_ingress: bool = False
+    client_ingress_bandwidth: float = NIC_BANDWIDTH
 
     def loader_config(self, shard_id: int,
                       preferred_nodes: Optional[tuple] = None) -> LoaderConfig:
@@ -138,7 +161,9 @@ class MultiHostConfig:
             num_shards=self.n_hosts,
             materialize=self.materialize,
             virtual_clock=True,
-            preferred_nodes=preferred_nodes)
+            preferred_nodes=preferred_nodes,
+            flow_control=self.flow_control,
+            flow=self.flow)
 
 
 class MultiHostRun:
@@ -192,6 +217,22 @@ class MultiHostRun:
         else:       # contiguous: loader carves its own strip (PR1 semantics)
             plans = [None] * cfg.n_hosts
             prefs = [None] * cfg.n_hosts
+        if cfg.shared_client_ingress and self.federation is not None:
+            raise ValueError("shared_client_ingress is not supported with a "
+                             "federation (each host already multiplexes its "
+                             "member sub-pools over one NIC)")
+        # Co-located consumers: one client NIC for every host, plus — under
+        # adaptive flow control — a fairness cap so the hosts' budgets
+        # converge to ~1/N shares of that NIC instead of out-buffering each
+        # other.
+        shared_ingress = None
+        self.limiter = None
+        if cfg.shared_client_ingress:
+            shared_ingress = RateResource("client/shared-ingress",
+                                          cfg.client_ingress_bandwidth)
+            if cfg.flow_control == "adaptive":
+                self.limiter = SharedIngressLimiter(
+                    cfg.client_ingress_bandwidth)
         self.loaders = []
         for i in range(cfg.n_hosts):
             pool = None
@@ -209,7 +250,9 @@ class MultiHostRun:
                                 cfg.loader_config(i, None if pool
                                                   else prefs[i]),
                                 clock=self.clock, cluster=self.cluster,
-                                plan=plans[i], pool=pool))
+                                plan=plans[i], pool=pool,
+                                ingress=shared_ingress,
+                                flow_limiter=self.limiter))
         self.rounds_consumed = 0
         self._started = False
 
@@ -245,6 +288,7 @@ class MultiHostRun:
                 if overrides:
                     ld.plan.install_overrides(_parse_overrides(overrides))
                 ld.start(s["epoch"], s["cursor"])
+                ld.restore_flow(s.get("flow"))
         else:
             self._start_resharded(checkpoint)
         self._started = True
@@ -289,8 +333,15 @@ class MultiHostRun:
         for epoch, tail in sorted(tails.items()):
             for ld, strip in zip(self.loaders, self._split(tail)):
                 ld.plan.install_overrides({epoch: strip})
+        # Re-seed flow control across the resize: the cluster-wide in-flight
+        # total is conserved (N shards' budgets merge, then split M ways), so
+        # the restored run resumes at the measured operating point instead of
+        # re-slow-starting against a warm cluster.
+        merged_flow = merge_snapshots(
+            [s.get("flow") for s in checkpoint["shards"]], len(self.loaders))
         for ld in self.loaders:
             ld.start(start_epoch, 0)
+            ld.restore_flow(merged_flow)
 
     def _rebuild_old_plans(self, checkpoint: Dict) -> List[EpochPlan]:
         """Reconstruct the checkpointed run's shard plans from the recorded
@@ -371,6 +422,16 @@ class MultiHostRun:
         served0 = [dict(ld.pool.served_by_node) for ld in self.loaders]
         egress0 = {name: node.egress_bytes
                    for name, node in self.cluster.nodes.items()}
+        # retry counters snapshot: reports are per-window like the egress
+        # numbers, so a recovered outage stops showing up in later windows
+        counters0 = {
+            "failovers": sum(ld.pool.failovers for ld in self.loaders),
+            "requests_sent": sum(ld.pool.requests_sent
+                                 for ld in self.loaders),
+        }
+        if self.federation is not None:
+            counters0["cluster_failovers"] = sum(ld.pool.cluster_failovers
+                                                 for ld in self.loaders)
         for _ in range(n_rounds):
             for host_id, ld in enumerate(self.loaders):
                 batch = ld.next_batch(timeout=timeout)
@@ -379,11 +440,12 @@ class MultiHostRun:
             if step_time > 0.0:
                 self.clock.sleep(step_time)
         self.rounds_consumed += n_rounds
-        return self._report(t0, bytes0, served0, egress0, n_rounds)
+        return self._report(t0, bytes0, served0, egress0, counters0,
+                            n_rounds)
 
     def _report(self, t0: float, bytes0: List[int],
                 served0: List[Dict[str, int]], egress0: Dict[str, int],
-                n_rounds: int) -> Dict:
+                counters0: Dict[str, int], n_rounds: int) -> Dict:
         elapsed = max(self.clock.now() - t0, 1e-9)
         per_client_bytes = [ld.pool.bytes_received - b0
                             for ld, b0 in zip(self.loaders, bytes0)]
@@ -414,8 +476,11 @@ class MultiHostRun:
             # fairness: worst/best per-client rate (1.0 = perfectly fair)
             "fairness": (min(per_client_Bps) / max(max(per_client_Bps), 1e-9)
                          if per_client_Bps else 0.0),
-            "failovers": sum(ld.pool.failovers for ld in self.loaders),
-            "requests_sent": sum(ld.pool.requests_sent for ld in self.loaders),
+            "failovers": (sum(ld.pool.failovers for ld in self.loaders)
+                          - counters0["failovers"]),
+            "requests_sent": (sum(ld.pool.requests_sent
+                                  for ld in self.loaders)
+                              - counters0["requests_sent"]),
             "placement": self.cfg.placement,
             "replica_local_hit_frac": local_served / max(total_served, 1),
             "per_node_egress_share": egress_share,
@@ -424,6 +489,11 @@ class MultiHostRun:
                                  if egress_share else 0.0),
             "cluster_load": self.cluster.load_report(),
         }
+        if self.cfg.flow_control == "adaptive":
+            # per-host controller operating points (per member cluster under
+            # a federation): budget, BDP estimate, min-RTT, backoff counts
+            report["flow"] = [ld.flow_controller.report()
+                              for ld in self.loaders]
         if self.federation is not None:
             # break the window's egress out per member cluster; the WAN-bytes
             # share is the fraction served over WAN routes (federation
@@ -440,8 +510,9 @@ class MultiHostRun:
                 c: v / total for c, v in per_cluster.items()}
             report["wan_bytes_share"] = sum(
                 v for c, v in per_cluster.items() if c in wan) / total
-            report["cluster_failovers"] = sum(ld.pool.cluster_failovers
-                                              for ld in self.loaders)
+            report["cluster_failovers"] = (
+                sum(ld.pool.cluster_failovers for ld in self.loaders)
+                - counters0["cluster_failovers"])
             report["cluster_report"] = self.federation.cluster_report()
         return report
 
@@ -462,6 +533,8 @@ class MultiHostRun:
             if pending:
                 s["overrides"] = {int(e): [str(u) for u in samples]
                                   for e, samples in pending.items()}
+            if ld.flow_controller is not None:
+                s["flow"] = ld.flow_controller.snapshot()
             shards.append(s)
         ck = {
             "rounds": self.rounds_consumed,

@@ -29,6 +29,8 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
+from .stats import windowed_series
+
 # ---------------------------------------------------------------------------
 # Clocks
 # ---------------------------------------------------------------------------
@@ -348,6 +350,26 @@ BACKENDS = {"scylla": SCYLLA, "cassandra": CASSANDRA}
 
 DISK_BANDWIDTH = 8.0e9  # 4x NVMe striped volume, bytes/s (paper: 7.4 GB/s observed)
 
+# Mean of AIMDBandwidth's per-connection capacity draw (uniform 0.85-1.0) —
+# what an analytic "expected bottleneck rate" should multiply capacities by.
+EXPECTED_CONN_CAPACITY_DRAW = 0.925
+
+
+def route_bdp_samples(route: "RouteProfile | str", n_conns: int,
+                      sample_bytes: float,
+                      backend: "BackendModel" = None) -> float:
+    """True route BDP in *samples*, from first principles (the analytic
+    yardstick the flow-control tests and benchmarks measure the controller
+    against — not the controller's own estimate): expected bottleneck rate
+    (connections, client NIC, node disk) times the effective round trip
+    (propagation + median service + one transfer)."""
+    prof = TIERS[route] if isinstance(route, str) else route
+    backend = backend or SCYLLA
+    rate_Bps = min(n_conns * prof.conn_capacity * EXPECTED_CONN_CAPACITY_DRAW,
+                   NIC_BANDWIDTH, DISK_BANDWIDTH)
+    rtt_eff = prof.rtt + backend.base_service + sample_bytes / prof.conn_capacity
+    return rate_Bps / sample_bytes * rtt_eff
+
 
 # ---------------------------------------------------------------------------
 # Simulated server node + TCP connection
@@ -507,26 +529,13 @@ class SimConnection:
 
     def throughput_series(self, window: float = 0.5):
         """Windowed throughput trace (t, bytes/s) — reproduces Fig. 5/6."""
-        if not self.trace:
-            return []
-        end = self.trace[-1][0]
-        out = []
-        w_start, acc = 0.0, 0
-        i = 0
-        while w_start <= end:
-            w_end = w_start + window
-            while i < len(self.trace) and self.trace[i][0] < w_end:
-                acc += self.trace[i][1]
-                i += 1
-            out.append((w_start, acc / window))
-            acc = 0
-            w_start = w_end
-        return out
+        return windowed_series(self.trace, window)
 
 
 __all__ = [
     "Clock", "VirtualClock", "RealClock", "RouteProfile", "TIERS",
     "AIMDBandwidth", "FifoResource", "RateResource", "BackendModel",
     "SCYLLA", "CASSANDRA", "BACKENDS", "SimServerNode", "SimConnection",
-    "NIC_BANDWIDTH", "DISK_BANDWIDTH",
+    "NIC_BANDWIDTH", "DISK_BANDWIDTH", "EXPECTED_CONN_CAPACITY_DRAW",
+    "route_bdp_samples",
 ]

@@ -15,6 +15,14 @@ front-loading k batches of requests at t=0 (bursting the network to k× the
 steady rate), request one extra batch every ``ramp_every`` consumed — a
 transient of only +1/ramp_every (25% for the paper's value of 4).
 
+Both also support **adaptive flow control**
+(``PrefetchConfig.flow_control="adaptive"``): a BDP-tracking
+``FlowController`` (``core/flowctl.py``) replaces the fixed depth k and the
+fixed ramp — the in-flight budget slow-starts to the measured
+bandwidth-delay product of the route and backs off on queueing-delay
+inflation, so no ``num_buffers`` hand-tuning is needed.  ``"static"`` (the
+default) is bit-identical to the pre-flow-control behaviour.
+
 Sharding / restart invariants carried by ``EpochPlan`` (property-tested in
 ``tests/test_resharding.py``; the multi-host and federation layers build on
 them, see ``core/multihost.py``):
@@ -48,6 +56,7 @@ import numpy as np
 
 from .batch_loader import AssembledBatch, BatchAssembler, BatchRequest
 from .connection import ConnectionPool, FetchResult
+from .flowctl import FLOW_CONTROL_MODES, FlowControlConfig
 from .netsim import Clock
 from .placement import global_order, split_contiguous
 from .stats import LoaderStats
@@ -60,6 +69,28 @@ class PrefetchConfig:
     out_of_order: bool = True       # the paper's key optimization
     incremental_ramp: bool = True   # staggered buffer filling
     ramp_every: int = 4             # +1 extra batch every N consumed
+    # "static": the paper's fixed depth k + incremental ramp (default,
+    # bit-identical to pre-flow-control behaviour).  "adaptive": a
+    # BDP-tracking FlowController (core/flowctl.py) sets the in-flight
+    # budget from measured RTT and delivery rate; num_buffers and the ramp
+    # knobs are ignored (the controller's slow start is the ramp).
+    flow_control: str = "static"
+    flow: Optional[FlowControlConfig] = None
+
+    def __post_init__(self) -> None:
+        if self.batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, "
+                             f"got {self.batch_size}")
+        if self.num_buffers < 1:
+            raise ValueError(f"num_buffers must be >= 1, "
+                             f"got {self.num_buffers}")
+        if self.ramp_every < 1:
+            raise ValueError(f"ramp_every must be >= 1, "
+                             f"got {self.ramp_every}")
+        if self.flow_control not in FLOW_CONTROL_MODES:
+            raise ValueError(f"unknown flow_control mode "
+                             f"{self.flow_control!r} (choose from "
+                             f"{FLOW_CONTROL_MODES})")
 
 
 class EpochPlan:
@@ -208,11 +239,15 @@ def compute_reflow(old_plans: List[EpochPlan],
 class _PrefetcherBase:
     def __init__(self, clock: Clock, pool: ConnectionPool, plan: EpochPlan,
                  cfg: PrefetchConfig, assembler: Optional[BatchAssembler] = None,
-                 real_copy: bool = False) -> None:
+                 real_copy: bool = False, controller=None) -> None:
         self.clock = clock
         self.pool = pool
         self.plan = plan
         self.cfg = cfg
+        # Adaptive flow control (core/flowctl.py): when a controller is
+        # wired in, it owns the in-flight budget; the static k-buffer ramp
+        # below is the default-compatible path.
+        self.controller = controller
         self.assembler = assembler or BatchAssembler(clock, real_copy=real_copy)
         self.stats = LoaderStats(clock)
         self.consumed = 0               # batches handed to the consumer
@@ -220,9 +255,11 @@ class _PrefetcherBase:
         self._cursor0 = 0
         self._started = False
 
-    # -- ramp ------------------------------------------------------------
+    # -- ramp / flow control ----------------------------------------------
     def _target_depth(self) -> int:
         """Allowed number of batches in flight (requests+ready) right now."""
+        if self.controller is not None:
+            return self.controller.depth(self.cfg.batch_size)
         k = self.cfg.num_buffers
         if not self.cfg.incremental_ramp:
             return k
@@ -245,6 +282,9 @@ class _PrefetcherBase:
 
     def describe(self) -> str:
         mode = "OOO" if self.cfg.out_of_order else "in-order"
+        if self.controller is not None:
+            return (f"{mode}/adaptive depth={self._target_depth()} "
+                    f"B={self.cfg.batch_size}")
         ramp = "incremental" if self.cfg.incremental_ramp else "eager"
         return f"{mode}/{ramp} k={self.cfg.num_buffers} B={self.cfg.batch_size}"
 
@@ -365,9 +405,11 @@ class OutOfOrderPrefetcher(_PrefetcherBase):
 
 
 def make_prefetcher(clock: Clock, pool: ConnectionPool, plan: EpochPlan,
-                    cfg: PrefetchConfig, real_copy: bool = False):
+                    cfg: PrefetchConfig, real_copy: bool = False,
+                    controller=None):
     cls = OutOfOrderPrefetcher if cfg.out_of_order else InOrderPrefetcher
-    return cls(clock, pool, plan, cfg, real_copy=real_copy)
+    return cls(clock, pool, plan, cfg, real_copy=real_copy,
+               controller=controller)
 
 
 __all__ = ["PrefetchConfig", "EpochPlan", "compute_reflow",

@@ -6,9 +6,42 @@ Produces the raw material for the paper's Figs. 4-7 and Tables 3-4.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
+
+
+def windowed_series(events: Sequence[Tuple[float, float]],
+                    window: float = 0.5,
+                    start: float = 0.0) -> List[Tuple[float, float]]:
+    """Aggregate timestamped amounts into fixed windows.
+
+    ``events`` is a time-ordered sequence of ``(t, amount)``; the result is
+    one ``(window_start, amount_per_second)`` tuple per ``window``-wide
+    bucket from ``start`` through the last event (empty buckets yield 0.0).
+
+    This is the single windowed-throughput aggregation the whole stack
+    shares: per-connection transfer traces (``SimConnection
+    .throughput_series``, Figs. 5/6), consumed-batch throughput
+    (``LoaderStats.throughput_windows``, Fig. 4), and the flow controller's
+    delivery-rate estimate (``core/flowctl.py``).
+    """
+    if window <= 0.0:
+        raise ValueError(f"window must be positive, got {window}")
+    if not events:
+        return []
+    out: List[Tuple[float, float]] = []
+    acc = 0.0
+    w0, i = start, 0
+    end = events[-1][0]
+    while w0 <= end:
+        w1 = w0 + window
+        while i < len(events) and events[i][0] < w1:
+            acc += events[i][1]
+            i += 1
+        out.append((w0, acc / window))
+        acc, w0 = 0.0, w1
+    return out
 
 
 class LoaderStats:
@@ -64,18 +97,8 @@ class LoaderStats:
 
     def throughput_windows(self, window: float = 0.5) -> List[tuple]:
         """(t, bytes/s) aggregate over consumed batches."""
-        if not self.batch_consume_t:
-            return []
-        out, acc, w0, i = [], 0, 0.0, 0
-        end = self.batch_consume_t[-1]
-        while w0 <= end:
-            w1 = w0 + window
-            while i < len(self.batch_consume_t) and self.batch_consume_t[i] < w1:
-                acc += self.batch_nbytes[i]
-                i += 1
-            out.append((w0, acc / window))
-            acc, w0 = 0, w1
-        return out
+        return windowed_series(list(zip(self.batch_consume_t,
+                                        self.batch_nbytes)), window)
 
 
 def summarize(values: np.ndarray) -> dict:
@@ -87,4 +110,4 @@ def summarize(values: np.ndarray) -> dict:
             "max": float(values.max())}
 
 
-__all__ = ["LoaderStats", "summarize"]
+__all__ = ["LoaderStats", "summarize", "windowed_series"]
