@@ -20,6 +20,8 @@ from .placement import (PLACEMENT_POLICIES, global_order,
                         split_strips)
 from .prefetcher import (EpochPlan, InOrderPrefetcher, OutOfOrderPrefetcher,
                          PrefetchConfig, compute_reflow, make_prefetcher)
+from .replication import (SAMPLING_MODES, HotKeyTracker, ReplicaCache,
+                          Replication, ReplicationConfig, ZipfPlan)
 from .splits import SplitSpec, check_entity_independence, create_splits
 
 __all__ = [
@@ -36,6 +38,7 @@ __all__ = [
     "compute_reflow", "PLACEMENT_POLICIES", "global_order",
     "preferred_node_subsets", "replica_local_fraction", "split_strips",
     "InOrderPrefetcher", "OutOfOrderPrefetcher", "PrefetchConfig",
-    "make_prefetcher", "SplitSpec", "check_entity_independence",
-    "create_splits",
+    "make_prefetcher", "SAMPLING_MODES", "HotKeyTracker", "ReplicaCache",
+    "Replication", "ReplicationConfig", "ZipfPlan", "SplitSpec",
+    "check_entity_independence", "create_splits",
 ]

@@ -36,6 +36,10 @@ class FetchResult:
     t_done: float
     conn_id: int
     hedged: bool = False
+    # serving node (qualified "<cluster>/<node>" under a federation) — what
+    # replica-hit accounting attributes a completion to, so a fetch routed
+    # to a replica but diverted mid-flight is not reported as a saving
+    node: Optional[str] = None
 
 
 class ConnectionPool:
@@ -104,14 +108,17 @@ class ConnectionPool:
 
     # -- routing ---------------------------------------------------------
     def _pick_connection(self, key: _uuid.UUID,
-                         exclude: Iterable[SimConnection] = ()) -> SimConnection:
+                         exclude: Iterable[SimConnection] = (),
+                         rf: Optional[int] = None) -> SimConnection:
         """Token-aware: least-loaded connection to a *live* replica of
         ``key`` — biased toward this host's preferred nodes when a preferred
         replica is alive; falls back to any live node, then to anything at
         all (a totally dark cluster still gets a target, and the request
-        fails)."""
+        fails).  ``rf`` widens the replica set beyond the cluster's own
+        (hot-key replicas are fanned out across the region cluster, see
+        core/replication.py)."""
         excluded = set(exclude)
-        replicas = self.cluster.ring.replicas(key, self.cluster.rf)
+        replicas = self.cluster.ring.replicas(key, rf or self.cluster.rf)
         candidates: List[SimConnection] = []
         for name in replicas:
             candidates.extend(self._conns_by_node.get(name, []))
@@ -134,14 +141,16 @@ class ConnectionPool:
         return min(pool, key=lambda c: (c.inflight, c.conn_id))
 
     # -- fetch -------------------------------------------------------------
-    def fetch(self, key: _uuid.UUID, on_done: Callable[[FetchResult], None]) -> None:
+    def fetch(self, key: _uuid.UUID, on_done: Callable[[FetchResult], None],
+              rf: Optional[int] = None) -> None:
         """Single-row read: features + label in one query (Sec. 3.1).
 
         A connection error (target node down) triggers failover: the request
         is re-sent on a connection to a different node.  Once every distinct
         connection has failed, retries continue after an RTT of backoff —
         so a cluster-wide outage surfaces as the caller's timeout, while a
-        node that recovers mid-run is picked up automatically.
+        node that recovers mid-run is picked up automatically.  ``rf``
+        widens the routable replica set (hot-key replica serving).
         """
         row = self.cluster.store.get_data(key)
         t0 = self.clock.now()
@@ -159,7 +168,8 @@ class ConnectionPool:
             payload = row.materialize() if self.materialize else row.payload
             on_done(FetchResult(uuid=key, label=row.label, size=row.size,
                                 payload=payload, t_issued=t0, t_done=t_done,
-                                conn_id=conn.conn_id, hedged=hedged))
+                                conn_id=conn.conn_id, hedged=hedged,
+                                node=name))
 
         def attempt(conn: SimConnection, hedged: bool, tried: frozenset) -> None:
             self.requests_sent += 1
@@ -171,7 +181,7 @@ class ConnectionPool:
                 if self.controller is not None:
                     self.controller.on_failure()
                 now_tried = tried | {conn}
-                nxt = self._pick_connection(key, exclude=now_tried)
+                nxt = self._pick_connection(key, exclude=now_tried, rf=rf)
                 if nxt in now_tried:
                     # no untried connection left for this key (e.g. the whole
                     # cluster is dark): a federated pool may divert the
@@ -186,22 +196,32 @@ class ConnectionPool:
                     self.clock.schedule(
                         max(self.route.rtt, 1e-3),
                         lambda: state["done"] or attempt(
-                            self._pick_connection(key), hedged, frozenset()))
+                            self._pick_connection(key, rf=rf), hedged,
+                            frozenset()))
                     return
                 attempt(nxt, hedged, now_tried)
 
             conn.request(row.size, lambda t: complete(conn, hedged, t), failed)
 
-        first = self._pick_connection(key)
+        if self.controller is not None:
+            self.controller.note_inflight(self.inflight)
+        first = self._pick_connection(key, rf=rf)
         attempt(first, False, frozenset())
 
         if self.hedge_after is not None:
             def maybe_hedge() -> None:
                 if state["done"]:
                     return
+                backup = self._pick_connection(key, exclude=(first,), rf=rf)
+                if backup is first:
+                    # no distinct connection to divert to (single-connection
+                    # pool / everything else dark): nothing is sent, so no
+                    # congestion signal either — feeding on_hedge here would
+                    # AIMD-back-off the budget for a hedge that never
+                    # happened.
+                    return
                 if self.controller is not None:
                     self.controller.on_hedge()
-                backup = self._pick_connection(key, exclude=(first,))
                 attempt(backup, True, frozenset({first}))
 
             self.clock.schedule(self.hedge_after, maybe_hedge)

@@ -49,10 +49,27 @@ Pieces, bottom up:
     once-guard keeps delivery exactly-once even when a hedge and a
     cross-cluster failover race.
 
+Runtime placement (this PR's layer, see ``core/replication.py``):
+
+* **Hot-key replication** — ``attach_replication`` gives the federation a
+  shared ``HotKeyTracker`` + ``ReplicaCache``; every pool records accesses,
+  serves live same-version replicas from the host's *region* cluster before
+  the home cluster, and promotes hot off-region keys with a real WAN copy
+  (home replica node disk+egress plus the home route's RTT and transfer
+  time).  ``write_through`` bumps the key's version and invalidates its
+  replica, so a stale copy can never serve.
+* **Bandwidth-aware rebalancing** — ``FederatedRing.rebalance`` emits a new
+  deterministic ownership map shifted toward members with spare
+  bandwidth-delay product (measured by the flow controllers,
+  ``FlowController.spare_bdp_samples``); ``install_ownership`` swaps it in
+  as the *routing* ring while the declared ring keeps defining placement
+  strips, and checkpoints carry both.
+
 Exactly-once per epoch is a *plan* property (``EpochPlan`` strips are
 disjoint and jointly covering; see ``core/prefetcher.py``), not a routing
-one — so it holds across the federation, through cluster outages and
-through elastic N->M resizes, without this module doing anything special.
+one — so it holds across the federation, through cluster outages, elastic
+N->M resizes, replica serving and ownership rebalances, without this module
+doing anything special.
 """
 
 from __future__ import annotations
@@ -65,10 +82,11 @@ from .cluster import Cluster, TokenRing
 from .connection import ConnectionPool
 from .flowctl import (FlowControlConfig, FlowControllerGroup,
                       SharedIngressLimiter)
-from .kvstore import KVStore, token_of
+from .kvstore import DataRow, KVStore, MetaRow, token_of
 from .netsim import (DISK_BANDWIDTH, NIC_BANDWIDTH, Clock, RateResource,
                      RouteProfile, TIERS)
 from .placement import preferred_node_subsets
+from .replication import Replication, ReplicationConfig
 
 # A route is "WAN" when its RTT clears this threshold — separates the paper's
 # local/low tiers (same building / same region) from med/high (cross-region /
@@ -163,6 +181,67 @@ class FederatedRing:
                  "ring_seed": self._ring_seeds[n], "rf": self._rfs[n],
                  "weight": self._weights[n]} for n in self.names]
 
+    @property
+    def weights(self) -> Dict[str, int]:
+        return dict(self._weights)
+
+    # -- bandwidth-aware rebalancing -----------------------------------------
+    # Rebalanced weights are expressed in finer grains than the declared
+    # ones so a fractional ownership shift stays an integer weight map.
+    REBALANCE_GRAIN = 16
+
+    def rebalance(self, spare: Dict[str, float],
+                  step: float = 0.25) -> "FederatedRing":
+        """A new ring with ownership shifted toward spare capacity.
+
+        ``spare`` is per-cluster spare bandwidth-delay product (samples of
+        unused in-flight headroom, see ``FlowController.spare_bdp_samples``).
+        The new weight map moves ``step`` of the total weight from the
+        current shares toward the spare-BDP shares:
+
+            w'[c] ∝ (1 - step) * w[c] + step * total * spare[c] / Σ spare
+
+        rounded largest-remainder with deterministic (name-ordered) tie
+        breaks, every weight clamped to >= 1, and the total conserved — so
+        the result is a pure function of ``(weights, spare, step)``: two
+        hosts computing it from the same inputs get byte-identical ownership
+        maps, and ``metadata()`` checkpoints it exactly like the declared
+        ring (property-tested in ``tests/test_replication.py``).  With no
+        spare anywhere the ring is returned unchanged.
+        """
+        if not 0.0 <= step <= 1.0:
+            raise ValueError(f"step must be in [0, 1], got {step}")
+        s_total = sum(max(spare.get(n, 0.0), 0.0) for n in self.names)
+        if step == 0.0 or s_total <= 0.0:
+            return self
+        grains = {n: self._weights[n] * self.REBALANCE_GRAIN
+                  for n in self.names}
+        total = sum(grains.values())
+        targets = {n: ((1.0 - step) * grains[n]
+                       + step * total * max(spare.get(n, 0.0), 0.0) / s_total)
+                   for n in self.names}
+        new = {n: max(1, int(targets[n])) for n in self.names}
+        # largest-remainder distribution of the leftover grains, then — if
+        # the >=1 clamp overshot — take grains back from the largest weights
+        remainder = total - sum(new.values())
+        order = sorted(self.names,
+                       key=lambda n: (-(targets[n] - int(targets[n])), n))
+        i = 0
+        while remainder > 0:
+            new[order[i % len(order)]] += 1
+            remainder -= 1
+            i += 1
+        give_back = sorted(self.names, key=lambda n: (-new[n], n))
+        i = 0
+        while remainder < 0:
+            n = give_back[i % len(give_back)]
+            if new[n] > 1:
+                new[n] -= 1
+                remainder += 1
+            i += 1
+        return FederatedRing(self.names, self._rings, self._rfs, new,
+                             self._ring_seeds, self._n_nodes)
+
     # -- ownership ----------------------------------------------------------
     def owner_of(self, key: _uuid.UUID) -> str:
         slot = token_of(key) % self._total_weight
@@ -241,11 +320,35 @@ class FederatedCluster:
         }
         self.routes: Dict[str, RouteProfile] = {
             s.name: s.route_profile() for s in specs}
+        # ``ring`` is the *declared* keyspace map — what placement strips are
+        # derived from and what ``checkpoint["federation"]`` records.
+        # ``routing_ring`` is what serving consults; it starts as the same
+        # object and diverges when bandwidth-aware rebalancing installs a
+        # shifted ownership map (checkpointed separately as "ownership").
+        # The keyspace is shared, so routing off the declared map is always
+        # safe — rebalance changes performance, never correctness.
         self.ring = FederatedRing.from_clusters(specs, self.clusters)
+        self.routing_ring = self.ring
+        # Hot-key replication (core/replication.py): attached on demand;
+        # None keeps every fetch on its home cluster.
+        self.replication: Optional[Replication] = None
+        # Keyspace write versions: bumped by write_through so a replica
+        # copied before a write can never serve after it (the cache checks).
+        self._versions: Dict[_uuid.UUID, int] = {}
 
     # -- ownership / topology ------------------------------------------------
     def owner_of(self, key: _uuid.UUID) -> str:
-        return self.ring.owner_of(key)
+        return self.routing_ring.owner_of(key)
+
+    def install_ownership(self, ring: FederatedRing) -> None:
+        """Swap in a rebalanced ownership map (same members, new weights).
+        Replicas promoted under the old map stay valid — the cache pins the
+        serving cluster per key, and version checks guard staleness."""
+        if list(ring.names) != [s.name for s in self.specs]:
+            raise ValueError(f"ownership map members {list(ring.names)} != "
+                             f"federation members "
+                             f"{[s.name for s in self.specs]}")
+        self.routing_ring = ring
 
     def ownership_counts(self, uuids: Sequence[_uuid.UUID]) -> Dict[str, int]:
         counts = {s.name: 0 for s in self.specs}
@@ -260,10 +363,60 @@ class FederatedCluster:
         authority on degradation order — routing and mid-flight failover
         both go through here (keyspace is shared, so any member can serve
         any key)."""
-        for name in self.ring.failover_order(self.owner_of(key)):
+        for name in self.routing_ring.failover_order(self.owner_of(key)):
             if name not in exclude and self.clusters[name].alive_nodes():
                 return name
         return None
+
+    # -- hot-key replication -------------------------------------------------
+    def attach_replication(self,
+                           cfg: Optional[ReplicationConfig] = None
+                           ) -> Replication:
+        """Switch hot-key replication on (idempotent): one shared tracker +
+        replica cache for every host's pool (hotness is a workload property,
+        and one host's promotion serves them all)."""
+        if self.replication is None:
+            self.replication = Replication(cfg or ReplicationConfig(),
+                                           self.clock)
+        return self.replication
+
+    def version_of(self, key: _uuid.UUID) -> int:
+        return self._versions.get(key, 0)
+
+    def write_through(self, data: DataRow, meta: MetaRow) -> None:
+        """Keyspace write: update the shared store, bump the key's version
+        and invalidate any replica of it — write-through semantics, so the
+        home cluster always has the new value and a stale copy can never be
+        served (the version check catches even an invalidation lost to a
+        concurrent promotion)."""
+        self.store.insert_atomic(data, meta)
+        self._versions[data.uuid] = self._versions.get(data.uuid, 0) + 1
+        if self.replication is not None:
+            self.replication.cache.invalidate(data.uuid)
+
+    def promote(self, key: _uuid.UUID, on_done, on_abort) -> None:
+        """Promotion copy of ``key``'s row out of its home cluster (the
+        destination is pinned by the caller's ``ReplicaCache`` entry): one
+        real WAN transfer — the home replica node serves the bytes (disk +
+        egress load where the data lives) and the copy crosses the home
+        cluster's route before the replica entry may go live.  ``on_abort``
+        fires instead when no home replica node is up."""
+        row = self.store.get_data(key)
+        owner = self.owner_of(key)
+        cl = self.clusters[owner]
+        live = [n for n in cl.ring.replicas(key, cl.rf)
+                if not cl.nodes[n].down]
+        if not live:
+            on_abort()
+            return
+        route = self.routes[owner]
+        now = self.clock.now()
+        t_leave = cl.nodes[live[0]].serve(now, row.size)
+        delay = max(t_leave - now, 0.0) + route.rtt \
+            + row.size / route.conn_capacity
+        if self.replication is not None:
+            self.replication.promotion_wan_bytes += row.size
+        self.clock.schedule(delay, on_done)
 
     def cluster_of_node(self, qualified_name: str) -> str:
         return qualified_name.split("/", 1)[0]
@@ -360,14 +513,32 @@ class FederatedConnectionPool:
                  seed: int = 99, hedge_after: Optional[float] = None,
                  materialize: bool = False,
                  client_ingress_bandwidth: float = NIC_BANDWIDTH,
-                 preferred_nodes: Optional[Sequence[str]] = None) -> None:
+                 preferred_nodes: Optional[Sequence[str]] = None,
+                 region: Optional[str] = None) -> None:
         self.clock = clock
         self.federation = federation
         self.cluster = federation          # Cluster-surface alias
         self.ingress = RateResource("client/ingress",
                                     client_ingress_bandwidth)
+        # This host's home region: hot keys are promoted into (and served
+        # from) this member cluster.  Default: the member with the lowest
+        # route RTT — the cluster "next to" the training hosts.
+        if region is not None and region not in federation.clusters:
+            raise ValueError(f"unknown region cluster {region!r} (members: "
+                             f"{[s.name for s in federation.specs]})")
+        self.region = region or min(
+            federation.specs, key=lambda s: (s.route_profile().rtt, s.name)
+        ).name
         self.cluster_failovers = 0         # fetches served off-owner
         self.duplicates_suppressed = 0     # late completions the once-guard ate
+        # completion-attributed replica accounting: hits and the fetch
+        # denominator both count when a fetch *delivers*, so the hit
+        # fraction compares like with like (a fetch routed to a replica but
+        # diverted mid-flight counts as a completed fetch, not a hit)
+        self.fetches = 0                   # completed fetches
+        self.replica_hits = 0              # completions served by a replica
+        self.wan_bytes_saved = 0           # replica hits whose home was WAN
+        self.promotions_issued = 0         # promotion copies this host started
         # Adaptive flow control: one FlowController per member cluster (each
         # fed by that member's sub-pool over that member's route), summed
         # into the host budget by a FlowControllerGroup.
@@ -407,25 +578,88 @@ class FederatedConnectionPool:
     # -- fetch --------------------------------------------------------------
     def fetch(self, key: _uuid.UUID,
               on_done: Callable) -> None:
-        """Route ``key`` to its owning cluster (degraded to a live replica
-        cluster when the owner is dark).  Delivery is exactly-once even when
-        a hedge in a dying cluster races the cross-cluster failover."""
+        """Route ``key``: a live same-version hot-key replica first (see
+        ``core/replication.py``), then its owning cluster (degraded to a
+        live replica cluster when the owner is dark).  Delivery is
+        exactly-once even when a hedge in a dying cluster races a
+        cross-cluster failover — replica-served fetches share the same
+        once-guard and exhaustion path as owner-served ones."""
         state = {"done": False}
 
-        def once(res) -> None:
+        def once(res, replica_of=None) -> None:
             if state["done"]:
                 self.duplicates_suppressed += 1
                 return
             state["done"] = True
+            self.fetches += 1
+            if replica_of is not None and res.node is not None:
+                # attribute at completion: a fetch *routed* to a replica but
+                # diverted mid-flight (region outage -> exhausted -> home
+                # cluster) must not be reported as a replica hit or a WAN
+                # saving — the bytes crossed the WAN after all
+                served = self.federation.cluster_of_node(res.node)
+                if served == replica_of:
+                    self.replica_hits += 1
+                    if (self.federation.owner_of(key)
+                            in self.federation.wan_clusters()
+                            and served
+                            not in self.federation.wan_clusters()):
+                        self.wan_bytes_saved += res.size
             on_done(res)
 
         owner = self.federation.owner_of(key)
+        rep = self.federation.replication
+        if rep is not None:
+            rep.tracker.record(key)
+            # a dark replica cluster is vetoed without consuming the cache
+            # hit (the entry survives — the outage path must not
+            # mass-invalidate a still-valid cache)
+            cached = rep.cache.serving_cluster(
+                key, self.federation.version_of(key), self.clock.now(),
+                usable=lambda c: (c in self.federation.clusters
+                                  and self.federation.clusters[c]
+                                  .alive_nodes()))
+            if cached is not None:
+                # replica serving fans out across the target cluster
+                # (cfg.replica_rf nodes, 0 = all), so hot traffic spreads
+                # instead of re-pinning an rf-sized node set
+                rf = (rep.cfg.replica_rf
+                      or len(self.federation.clusters[cached].nodes))
+                self.pools[cached].fetch(
+                    key, lambda res: once(res, replica_of=cached), rf=rf)
+                return
+            self._maybe_promote(key, owner, rep)
         # total blackout: keep targeting the owner, whose pool backs off and
         # retries (so a recovering cluster is picked up automatically)
         target = self.federation.serving_cluster(key) or owner
         if target != owner:
             self.cluster_failovers += 1
         self.pools[target].fetch(key, once)
+
+    def _maybe_promote(self, key: _uuid.UUID, owner: str, rep) -> None:
+        """Start a promotion copy when ``key`` is hot, lives off-region, and
+        the cache takes the reservation.  The entry serves only after the
+        WAN copy lands (``FederatedCluster.promote``); an abort (home
+        cluster dark) releases the reservation."""
+        if owner == self.region or not rep.tracker.is_hot(key):
+            return
+        if not self.federation.clusters[self.region].alive_nodes():
+            return
+        version = self.federation.version_of(key)
+        token = rep.cache.begin_promotion(key, self.region, version,
+                                          self.clock.now())
+        if token is None:
+            return
+        self.promotions_issued += 1
+
+        def landed() -> None:
+            rep.cache.commit_promotion(key, token)
+
+        def aborted() -> None:
+            rep.promotions_aborted += 1
+            rep.cache.release(key, token)
+
+        self.federation.promote(key, on_done=landed, on_abort=aborted)
 
     def _make_exhausted(self, cname: str):
         """Cluster-level failover: when every connection to ``cname`` has
@@ -476,4 +710,4 @@ class FederatedConnectionPool:
 
 __all__ = ["ClusterSpec", "FederatedRing", "FederatedCluster",
            "FederatedConnectionPool", "federated_preferred_subsets",
-           "WAN_RTT_THRESHOLD"]
+           "WAN_RTT_THRESHOLD", "Replication", "ReplicationConfig"]

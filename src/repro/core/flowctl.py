@@ -157,6 +157,11 @@ class FlowController:
         self._rtt_ema: Optional[float] = None
         self._min_rtt_hint: Optional[float] = None  # checkpoint re-seed
         self._avg_bytes: Optional[float] = None
+        # in-flight load EMA (fed by the pool at issue time): the gap
+        # between the budget and this is the route's *spare* BDP — the
+        # signal ownership rebalancing shifts keyspace weight toward
+        # (see FederatedRing.rebalance in core/federation.py).
+        self._inflight_ema: Optional[float] = None
         self._cooldown_until = -math.inf
         self._next_probe_rtt = cfg.probe_rtt_interval
         self._drain_until = -math.inf
@@ -232,6 +237,12 @@ class FlowController:
                 self._drain_until = t_done + 2.0 * max(min_rtt or 0.0, 1e-3)
         self._record()
 
+    def note_inflight(self, inflight: int) -> None:
+        """Sample the pool's in-flight count (called per issued fetch)."""
+        self._inflight_ema = (float(inflight) if self._inflight_ema is None
+                              else 0.95 * self._inflight_ema
+                              + 0.05 * inflight)
+
     def on_failure(self) -> None:
         """A connection failed over — treat like a loss event."""
         self._loss_signal()
@@ -278,6 +289,16 @@ class FlowController:
 
     def avg_sample_bytes(self) -> Optional[float]:
         return self._avg_bytes
+
+    def spare_bdp_samples(self) -> float:
+        """Unused in-flight headroom: operating budget minus the measured
+        in-flight load.  A member pinned at its budget has ~0 spare; an
+        underused (or entirely idle) member exposes its full headroom —
+        what bandwidth-aware ownership rebalancing shifts keys toward."""
+        budget = self._budget_raw(ignore_drain=True)
+        if self._inflight_ema is None:
+            return budget               # never asked to carry anything
+        return max(0.0, budget - self._inflight_ema)
 
     # -- budget -------------------------------------------------------------
     def _budget_raw(self, ignore_drain: bool = False) -> float:
@@ -367,6 +388,7 @@ class FlowController:
             "bdp_samples": self.bdp_samples(),
             "min_rtt_s": self.min_rtt(),
             "rate_samples_per_s": self.delivery_rate(),
+            "spare_bdp_samples": self.spare_bdp_samples(),
             "slow_start": self._slow_start,
             "backoffs": self.backoffs,
             "loss_signals": self.loss_signals,
@@ -395,6 +417,11 @@ class FlowControllerGroup:
         b = batch_size or self.batch_size
         total = sum(c._budget_raw() for c in self.members.values())
         return max(1, int(math.ceil(total / b)))
+
+    def spare_by_member(self) -> Dict[str, float]:
+        """Per-member spare BDP (samples) — the rebalance input signal."""
+        return {name: c.spare_bdp_samples()
+                for name, c in self.members.items()}
 
     def snapshot(self) -> Dict:
         return {"members": {name: c.snapshot()

@@ -53,6 +53,16 @@ per-cluster egress and the WAN-bytes share.  Checkpoints record the
 federation's ring metadata, so elastic restores rebuild the old strips
 exactly — across host-count changes AND federation changes.
 
+Runtime placement (``core/replication.py``): ``sampling="zipf"`` opens the
+skewed-access workload class (with-replacement Zipf draws, globally-shared
+hot keys); ``placement="replication_aware"`` (or an explicit
+``MultiHostConfig.replication``) promotes hot keys onto the hosts' region
+cluster and serves them locally, reported as ``replica_hit_frac`` and
+``wan_bytes_saved``; ``MultiHostRun.rebalance()`` shifts weighted keyspace
+ownership toward members whose flow controllers measure spare
+bandwidth-delay product.  Replica cache and rebalanced ownership map ride
+``checkpoint()`` and restore across elastic N->M unchanged.
+
 Invariants this module maintains (property-tested in
 ``tests/test_resharding.py`` / ``tests/test_multihost.py`` /
 ``tests/test_federation.py``):
@@ -88,9 +98,11 @@ from .flowctl import (FlowControlConfig, SharedIngressLimiter,
 from .kvstore import KVStore
 from .loader import CassandraLoader, LoaderConfig
 from .netsim import DISK_BANDWIDTH, NIC_BANDWIDTH, RateResource, VirtualClock
-from .placement import (PLACEMENT_POLICIES, global_order,
-                        preferred_node_subsets, split_strips)
+from .placement import (FEDERATED_POLICIES, PLACEMENT_POLICIES,
+                        RING_POLICIES, global_order, preferred_node_subsets,
+                        split_strips)
 from .prefetcher import EpochPlan, compute_reflow
+from .replication import SAMPLING_MODES, ReplicationConfig, ZipfPlan
 
 
 @dataclass
@@ -118,9 +130,11 @@ class MultiHostConfig:
     node_egress_bandwidth: float = NIC_BANDWIDTH
     node_disk_bandwidth: float = DISK_BANDWIDTH
     # Shard placement policy: "contiguous" (paper-faithful strips),
-    # "token_aware" (replica-skewed strips + preferred-node routing) or
+    # "token_aware" (replica-skewed strips + preferred-node routing),
     # "cluster_aware" (federation: same-region cluster, then replica-local
-    # node; requires ``clusters``).
+    # node; requires ``clusters``) or "replication_aware" (cluster_aware
+    # strips + hot-key replica serving/promotion at runtime; requires
+    # ``clusters`` and switches replication on with default knobs).
     placement: str = "contiguous"
     # Multi-cluster federation: when set, the run spans these member
     # clusters (per-cluster ring/route/rf/weight; see core/federation.py)
@@ -140,6 +154,18 @@ class MultiHostConfig:
     # NIC, so N hosts converge to ~1/N shares.
     shared_client_ingress: bool = False
     client_ingress_bandwidth: float = NIC_BANDWIDTH
+    # Hot-key replication knobs (core/replication.py): set to enable
+    # promotion of skewed-access keys onto the hosts' region cluster under
+    # any federated placement; ``placement="replication_aware"`` enables it
+    # with defaults when left None.  Needs ``clusters``.
+    replication: Optional[ReplicationConfig] = None
+    # Access distribution: "uniform" (per-epoch permutations, exactly-once —
+    # the default and the paper's workload) or "zipf" (seeded Zipf(zipf_s)
+    # sampling with replacement over the global key list — the skewed
+    # workload class hot-key replication exists for; exactly-once per epoch
+    # deliberately does not hold, see core/replication.py:ZipfPlan).
+    sampling: str = "uniform"
+    zipf_s: float = 1.05
 
     def loader_config(self, shard_id: int,
                       preferred_nodes: Optional[tuple] = None) -> LoaderConfig:
@@ -178,10 +204,13 @@ class MultiHostRun:
         if cfg.placement not in PLACEMENT_POLICIES:
             raise ValueError(f"unknown placement policy {cfg.placement!r} "
                              f"(choose from {PLACEMENT_POLICIES})")
-        if cfg.placement == "cluster_aware" and not cfg.clusters \
+        if cfg.placement in FEDERATED_POLICIES and not cfg.clusters \
                 and not isinstance(cluster, FederatedCluster):
-            raise ValueError("cluster_aware placement needs a federation "
+            raise ValueError(f"{cfg.placement} placement needs a federation "
                              "(set MultiHostConfig.clusters)")
+        if cfg.sampling not in SAMPLING_MODES:
+            raise ValueError(f"unknown sampling mode {cfg.sampling!r} "
+                             f"(choose from {SAMPLING_MODES})")
         self.cfg = cfg
         self.clock = clock or VirtualClock()
         if cluster is not None:
@@ -198,6 +227,14 @@ class MultiHostRun:
         self.federation = (self.cluster
                            if isinstance(self.cluster, FederatedCluster)
                            else None)
+        # Hot-key replication: explicit config or the replication_aware
+        # policy switches it on (shared tracker + cache on the federation).
+        if cfg.replication is not None or cfg.placement == "replication_aware":
+            if self.federation is None:
+                raise ValueError("hot-key replication needs a federation "
+                                 "(set MultiHostConfig.clusters)")
+            self.federation.attach_replication(cfg.replication)
+        self.rebalances = 0
         self._uuids = list(uuids)
         if self.federation is not None:
             self.preferred = federated_preferred_subsets(
@@ -205,7 +242,15 @@ class MultiHostRun:
         else:
             self.preferred = preferred_node_subsets(
                 self.cluster.node_names(), cfg.n_hosts)
-        if cfg.placement in ("token_aware", "cluster_aware"):
+        prefs = (self.preferred if cfg.placement in RING_POLICIES
+                 else [None] * cfg.n_hosts)
+        if cfg.sampling == "zipf":
+            # skewed workload: every host samples the same global rank->key
+            # map with replacement; placement strips don't apply (there is
+            # no exactly-once delivery set), preferred-node routing does.
+            plans = [ZipfPlan(uuids, cfg.seed, i, cfg.n_hosts, s=cfg.zipf_s)
+                     for i in range(cfg.n_hosts)]
+        elif cfg.placement in RING_POLICIES:
             strips = _steady_strips(uuids, cfg.seed, cfg.n_hosts,
                                     cfg.placement, ring=self.cluster.ring,
                                     rf=self.cluster.rf,
@@ -213,10 +258,8 @@ class MultiHostRun:
             plans = [EpochPlan.from_samples(strips[i], cfg.seed, i,
                                             cfg.n_hosts)
                      for i in range(cfg.n_hosts)]
-            prefs = self.preferred
         else:       # contiguous: loader carves its own strip (PR1 semantics)
             plans = [None] * cfg.n_hosts
-            prefs = [None] * cfg.n_hosts
         if cfg.shared_client_ingress and self.federation is not None:
             raise ValueError("shared_client_ingress is not supported with a "
                              "federation (each host already multiplexes its "
@@ -281,7 +324,10 @@ class MultiHostRun:
             raise ValueError(f"checkpoint was taken over {ck_size} samples, "
                              f"this run has {len(self._uuids)} — not the "
                              "same dataset")
-        if (len(checkpoint["shards"]) == len(self.loaders)
+        if (self.cfg.sampling == "zipf"
+                or checkpoint.get("sampling", "uniform") == "zipf"):
+            self._start_zipf(checkpoint)
+        elif (len(checkpoint["shards"]) == len(self.loaders)
                 and self._same_strips(checkpoint)):
             for ld, s in zip(self.loaders, checkpoint["shards"]):
                 overrides = s.get("overrides")
@@ -291,8 +337,54 @@ class MultiHostRun:
                 ld.restore_flow(s.get("flow"))
         else:
             self._start_resharded(checkpoint)
+        self._restore_runtime_placement(checkpoint)
         self._started = True
         return self
+
+    def _start_zipf(self, checkpoint: Dict) -> None:
+        """Restore involving Zipf sampling: with-replacement draws have no
+        exactly-once delivery set to reflow, so a matching checkpoint
+        resumes each shard's sample stream exactly and any mismatch (host
+        count, seed, exponent, sampling mode) restarts at the slowest
+        shard's epoch boundary with the merged flow-control budget."""
+        shards = checkpoint["shards"]
+        exact = (checkpoint.get("sampling", "uniform") == self.cfg.sampling
+                 == "zipf"
+                 and len(shards) == len(self.loaders)
+                 and checkpoint.get("seed", self.cfg.seed) == self.cfg.seed
+                 and checkpoint.get("zipf_s",
+                                    self.cfg.zipf_s) == self.cfg.zipf_s)
+        if exact:
+            for ld, s in zip(self.loaders, shards):
+                ld.start(s["epoch"], s["cursor"])
+                ld.restore_flow(s.get("flow"))
+            return
+        start_epoch = min(s["epoch"] for s in shards)
+        merged = merge_snapshots([s.get("flow") for s in shards],
+                                 len(self.loaders))
+        for ld in self.loaders:
+            ld.start(start_epoch, 0)
+            ld.restore_flow(merged)
+
+    def _restore_runtime_placement(self, checkpoint: Dict) -> None:
+        """Re-install checkpointed runtime placement state: the rebalanced
+        ownership map and the hot-key replication snapshot.  Both are
+        cluster-side, so they restore unchanged across elastic N->M; state
+        recorded against a *different* federation is dropped (its member
+        names no longer resolve)."""
+        if self.federation is None:
+            return
+        members = {s.name for s in self.federation.specs}
+        own = checkpoint.get("ownership")
+        if own and [m["name"] for m in own] == [s.name
+                                                for s in self.federation.specs]:
+            self.federation.install_ownership(FederatedRing.from_metadata(own))
+        snap = checkpoint.get("replication")
+        if snap and self.federation.replication is not None:
+            cache = {k: v for k, v in (snap.get("cache") or {}).items()
+                     if v.get("cluster") in members}
+            self.federation.replication.restore(
+                {"tracker": snap.get("tracker"), "cache": cache})
 
     def _same_strips(self, checkpoint: Dict) -> bool:
         """Does the checkpointed run's strip assignment match this run's?
@@ -303,7 +395,7 @@ class MultiHostRun:
                 or checkpoint.get("placement",
                                   "contiguous") != self.cfg.placement):
             return False
-        if self.cfg.placement in ("token_aware", "cluster_aware"):
+        if self.cfg.placement in RING_POLICIES:
             # ring-derived strips also depend on the topology: for a
             # federation that is the full per-member ring metadata, for a
             # single cluster the (node_names, ring_seed, rf) triple.
@@ -352,7 +444,7 @@ class MultiHostRun:
         seed = checkpoint.get("seed", self.cfg.seed)
         policy = checkpoint.get("placement", "contiguous")
         fed_meta = checkpoint.get("federation")
-        if policy in ("token_aware", "cluster_aware") and fed_meta:
+        if policy in RING_POLICIES and fed_meta:
             # federated strips: rebuild the keyspace ring (per-member token
             # rings + ownership weights) straight from the metadata
             ring = FederatedRing.from_metadata(fed_meta)
@@ -432,6 +524,13 @@ class MultiHostRun:
         if self.federation is not None:
             counters0["cluster_failovers"] = sum(ld.pool.cluster_failovers
                                                  for ld in self.loaders)
+            if self.federation.replication is not None:
+                counters0["fetches"] = sum(ld.pool.fetches
+                                           for ld in self.loaders)
+                counters0["replica_hits"] = sum(ld.pool.replica_hits
+                                                for ld in self.loaders)
+                counters0["wan_bytes_saved"] = sum(ld.pool.wan_bytes_saved
+                                                   for ld in self.loaders)
         for _ in range(n_rounds):
             for host_id, ld in enumerate(self.loaders):
                 batch = ld.next_batch(timeout=timeout)
@@ -514,7 +613,50 @@ class MultiHostRun:
                 sum(ld.pool.cluster_failovers for ld in self.loaders)
                 - counters0["cluster_failovers"])
             report["cluster_report"] = self.federation.cluster_report()
+            if self.federation.replication is not None:
+                # hot-key replication over this window: fraction of fetches
+                # served from a promoted replica, and the WAN bytes those
+                # hits kept off the intercontinental route
+                fetches = (sum(ld.pool.fetches for ld in self.loaders)
+                           - counters0["fetches"])
+                hits = (sum(ld.pool.replica_hits for ld in self.loaders)
+                        - counters0["replica_hits"])
+                report["replica_hit_frac"] = hits / max(fetches, 1)
+                report["wan_bytes_saved"] = (
+                    sum(ld.pool.wan_bytes_saved for ld in self.loaders)
+                    - counters0["wan_bytes_saved"])
+                report["replication"] = self.federation.replication.report()
+            report["ownership_weights"] = \
+                self.federation.routing_ring.weights
+            report["rebalances"] = self.rebalances
         return report
+
+    # -- bandwidth-aware ownership rebalancing -------------------------------
+    def rebalance(self, step: float = 0.25) -> Dict[str, int]:
+        """Shift weighted keyspace ownership toward member clusters with
+        spare bandwidth-delay product, as measured by every host's
+        per-member flow controllers (``FlowController.spare_bdp_samples``).
+        Emits — and installs — a new deterministic ownership map; returns
+        its weight map.  The declared ring (and therefore placement strips
+        and exactly-once accounting) is untouched: rebalancing only moves
+        *serving* load, which is safe because the keyspace is shared.
+        Requires a federation and ``flow_control="adaptive"`` (the signal
+        comes from the controllers)."""
+        if self.federation is None:
+            raise ValueError("ownership rebalancing needs a federation "
+                             "(set MultiHostConfig.clusters)")
+        if self.cfg.flow_control != "adaptive":
+            raise ValueError("ownership rebalancing needs "
+                             "flow_control='adaptive' (the spare-BDP signal "
+                             "comes from the flow controllers)")
+        spare = {s.name: 0.0 for s in self.federation.specs}
+        for ld in self.loaders:
+            for name, val in ld.flow_controller.spare_by_member().items():
+                spare[name] += val
+        new_ring = self.federation.routing_ring.rebalance(spare, step=step)
+        self.federation.install_ownership(new_ring)
+        self.rebalances += 1
+        return new_ring.weights
 
     # -- coordinated checkpointing ------------------------------------------
     def checkpoint(self) -> Dict:
@@ -542,14 +684,24 @@ class MultiHostRun:
             "dataset_size": len(self._uuids),
             "seed": self.cfg.seed,
             "placement": self.cfg.placement,
+            "sampling": self.cfg.sampling,
             "n_nodes": self.cfg.n_nodes,
             "node_names": self.cluster.node_names(),
             "ring_seed": self.cluster.ring_seed,
             "replication_factor": self.cfg.replication_factor,
             "shards": shards,
         }
+        if self.cfg.sampling == "zipf":
+            ck["zipf_s"] = self.cfg.zipf_s
         if self.federation is not None:
             ck["federation"] = self.federation.ring.metadata()
+            # runtime placement state rides along: the rebalanced ownership
+            # map (when one is installed) and the hot-key replica cache —
+            # both cluster-side, so they restore onto any host count
+            if self.federation.routing_ring is not self.federation.ring:
+                ck["ownership"] = self.federation.routing_ring.metadata()
+            if self.federation.replication is not None:
+                ck["replication"] = self.federation.replication.snapshot()
         return ck
 
     # -- introspection -------------------------------------------------------

@@ -33,6 +33,19 @@ strip per host.  *How* that carving is done is a placement policy:
     matters because the multi-host driver consumes in lockstep and the
     slowest host gates the round.
 
+``replication_aware``
+    ``cluster_aware`` plus hot-key replication at serve time (see
+    ``core/replication.py``).  Strip construction is *identical* to
+    ``cluster_aware`` — strips must stay a deterministic function of the
+    checkpointed (seed, ring) metadata, and the replica cache is runtime
+    state that changes as the workload's skew moves — so the "prefer a
+    local replica before the home cluster" preference lives in routing:
+    every ``FederatedConnectionPool.fetch`` consults the federation's
+    ``ReplicaCache`` first and only falls through to the home cluster on a
+    miss.  Selecting this policy is what switches that machinery on
+    (``MultiHostRun`` attaches a default ``ReplicationConfig`` when none is
+    given).
+
 Invariants shared by ALL policies (property-tested in
 ``tests/test_resharding.py``): strips are pairwise disjoint, jointly cover
 the input, and differ in size by at most one.  Those are exactly the
@@ -50,7 +63,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-PLACEMENT_POLICIES = ("contiguous", "token_aware", "cluster_aware")
+PLACEMENT_POLICIES = ("contiguous", "token_aware", "cluster_aware",
+                      "replication_aware")
+# Policies whose strips are ring-derived (need a ring + preference map);
+# the federated ones additionally need an ownership map (owner_of).
+RING_POLICIES = ("token_aware", "cluster_aware", "replication_aware")
+FEDERATED_POLICIES = ("cluster_aware", "replication_aware")
 
 
 def global_order(uuids: Sequence[_uuid.UUID], seed: int,
@@ -141,14 +159,15 @@ def split_strips(samples: Sequence[_uuid.UUID], num_shards: int,
     """Split ``samples`` into ``num_shards`` balanced strips per ``policy``."""
     if policy == "contiguous":
         return split_contiguous(samples, num_shards)
-    if policy in ("token_aware", "cluster_aware"):
+    if policy in RING_POLICIES:
         if ring is None or preferred is None:
             raise ValueError(f"{policy} placement needs a ring and a "
                              "preference map")
-        if policy == "cluster_aware" and not hasattr(ring, "owner_of"):
-            raise ValueError("cluster_aware placement needs a federated ring "
+        if policy in FEDERATED_POLICIES and not hasattr(ring, "owner_of"):
+            raise ValueError(f"{policy} placement needs a federated ring "
                              "(one with an owner_of(key) ownership map)")
-        # cluster_aware IS the token-aware greedy split — run over a
+        # cluster_aware (and replication_aware, whose extra behaviour is
+        # routing-time only) IS the token-aware greedy split — run over a
         # FederatedRing, whose replicas() already restricts each key to its
         # owning cluster, it prefers same-region cluster then replica-local
         # node by construction.
@@ -169,6 +188,7 @@ def replica_local_fraction(strips: Sequence[Sequence[_uuid.UUID]], ring,
     return hits / total
 
 
-__all__ = ["PLACEMENT_POLICIES", "global_order", "strip_bounds",
+__all__ = ["PLACEMENT_POLICIES", "RING_POLICIES", "FEDERATED_POLICIES",
+           "global_order", "strip_bounds",
            "split_contiguous", "split_token_aware", "split_strips",
            "preferred_node_subsets", "replica_local_fraction"]

@@ -437,3 +437,38 @@ def test_budget_respects_tiny_ceiling(store_uuids):
     assert ctl.operating_budget() == 3 * B
     assert ctl.depth() == 3
     assert max(b for _, b in ctl.budget_trace) <= 3 * B
+
+
+# ---------------------------------------------------------------------------
+# Hedge accounting: on_hedge only when a duplicate request is actually sent
+# ---------------------------------------------------------------------------
+
+def _one_fetch_pool(conns_per_thread: int):
+    store = KVStore()
+    uuids = ingest(store, SyntheticImageDataset(n_samples=4, seed=2))
+    clock = VirtualClock()
+    cluster = Cluster(clock, store, backend="scylla", n_nodes=1, rf=1, seed=3)
+    pool = ConnectionPool(clock, cluster, "high", io_threads=1,
+                          conns_per_thread=conns_per_thread, seed=5,
+                          hedge_after=0.01)
+    ctl = pool.attach_flow_control(FlowControlConfig(), batch_size=8)
+    done = []
+    pool.fetch(uuids[0], done.append)
+    assert clock.run_until(lambda: len(done) == 1, timeout=60.0)
+    return pool, ctl
+
+
+def test_hedge_suppressed_without_backup_connection_is_not_counted():
+    """Regression: the hedge timer used to feed on_hedge *before* checking
+    whether a duplicate could actually be sent, so a pool with no distinct
+    backup connection (everything else excluded/dark) AIMD-backed-off the
+    budget for a hedge that never happened."""
+    pool, ctl = _one_fetch_pool(conns_per_thread=1)
+    assert pool.requests_sent == 1          # nothing was duplicated...
+    assert ctl.loss_signals == 0            # ...so no congestion signal
+
+
+def test_hedge_that_fires_is_counted():
+    pool, ctl = _one_fetch_pool(conns_per_thread=2)
+    assert pool.requests_sent == 2          # duplicate actually sent
+    assert ctl.loss_signals == 1

@@ -1,0 +1,186 @@
+#!/usr/bin/env python3
+"""CI perf-regression gate: benchmark results vs committed baselines.
+
+The benchmark suites are deterministic (virtual clock + seeded RNGs), so a
+``--quick`` run on any machine produces the same numbers — what moves them
+is *code*.  This script turns that into a regression gate: it compares the
+headline metrics of each results file (written by the quick bench runs)
+against the committed baselines in ``benchmarks/baselines/`` and fails when
+any metric leaves the ±``--tolerance`` band (default ±15%).
+
+* a drop below the band is a **regression** — fix the code;
+* a rise above the band is an unrecorded **improvement** — rerun with
+  ``--update`` and commit the new baseline, so the gate stays tight around
+  reality instead of guarding a stale floor.
+
+A context block (bench sizing: batch size, rounds, dataset size...) is
+stored with each baseline and must match exactly — full-size nightly
+results are never judged against quick baselines.
+
+Boolean ``checks`` recorded in the results files must all be true as well
+(the benches assert them at run time; re-checking here keeps a hand-edited
+results file from sneaking past).
+
+Usage (CI runs exactly this, see .github/workflows/ci.yml):
+
+    PYTHONPATH=src python -m benchmarks.bench_ramp --flowctl --quick
+    PYTHONPATH=src python -m benchmarks.bench_multihost --replication --quick
+    python tools/bench_check.py
+
+Baseline update procedure (after an intentional perf change):
+
+    # regenerate the quick results, then
+    python tools/bench_check.py --update
+    git add benchmarks/baselines/ && git commit
+
+Exit code 0 = within tolerance, 1 = regression/missing file/stale baseline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+RESULTS_DIR = REPO_ROOT / "results"
+BASELINE_DIR = REPO_ROOT / "benchmarks" / "baselines"
+
+# Per results file: the sizing context that must match exactly, and the
+# dotted paths of the guarded scalar metrics.
+SPECS = {
+    "flowctl_ramp.json": {
+        "context": ["batch_size", "io_threads", "n_batches", "static_sweep"],
+        "metrics": [
+            "routes.local.adaptive.MBps",
+            "routes.local.best_static.MBps",
+            "routes.med.adaptive.MBps",
+            "routes.med.best_static.MBps",
+            "routes.high.adaptive.MBps",
+            "routes.high.best_static.MBps",
+            "federated.aggregate_MBps",
+        ],
+    },
+    "multihost_replication.json": {
+        "context": ["quick", "rounds", "n_samples", "zipf_s", "seed"],
+        "metrics": [
+            "uniform_MBps",
+            "zipf_MBps",
+            "zipf_replicated_MBps",
+            "replica_hit_frac",
+        ],
+    },
+}
+
+
+def dig(obj, path: str):
+    for part in path.split("."):
+        if not isinstance(obj, dict) or part not in obj:
+            raise KeyError(f"metric path {path!r} missing at {part!r}")
+        obj = obj[part]
+    if not isinstance(obj, (int, float)) or isinstance(obj, bool):
+        raise TypeError(f"metric {path!r} is not a number: {obj!r}")
+    return float(obj)
+
+
+def extract(name: str, results: dict) -> dict:
+    spec = SPECS[name]
+    return {
+        "context": {k: results.get(k) for k in spec["context"]},
+        "metrics": {p: dig(results, p) for p in spec["metrics"]},
+    }
+
+
+def check_file(name: str, tolerance: float, update: bool) -> list:
+    """Returns a list of problem strings (empty = this file is green)."""
+    results_path = RESULTS_DIR / name
+    baseline_path = BASELINE_DIR / name
+    if not results_path.exists():
+        return [f"{name}: no results at {results_path} — run the quick "
+                "bench first (see module docstring)"]
+    results = json.loads(results_path.read_text())
+
+    failed_checks = [k for k, ok in results.get("checks", {}).items()
+                     if not ok]
+    if failed_checks:
+        return [f"{name}: results file records failed checks: "
+                f"{failed_checks}"]
+
+    current = extract(name, results)
+    if update:
+        BASELINE_DIR.mkdir(parents=True, exist_ok=True)
+        baseline_path.write_text(json.dumps(current, indent=2,
+                                            sort_keys=True) + "\n")
+        print(f"  {name}: baseline updated "
+              f"({len(current['metrics'])} metrics)")
+        return []
+    if not baseline_path.exists():
+        return [f"{name}: no baseline at {baseline_path} — run "
+                "`python tools/bench_check.py --update` on a good build "
+                "and commit it"]
+    baseline = json.loads(baseline_path.read_text())
+
+    if baseline.get("context") != current["context"]:
+        return [f"{name}: bench sizing changed "
+                f"(baseline {baseline.get('context')} vs current "
+                f"{current['context']}) — full-size results are not "
+                "comparable to quick baselines; rerun the quick bench or "
+                "--update after an intentional resize"]
+
+    problems = []
+    for path, base in baseline["metrics"].items():
+        if path not in current["metrics"]:
+            problems.append(f"{name}: {path} missing from results")
+            continue
+        cur = current["metrics"][path]
+        rel = (cur - base) / abs(base) if base else (0.0 if cur == 0
+                                                     else float("inf"))
+        mark = "ok"
+        if rel < -tolerance:
+            mark = "REGRESSION"
+            problems.append(f"{name}: {path} regressed {rel:+.1%} "
+                            f"({base:.2f} -> {cur:.2f}, tolerance "
+                            f"±{tolerance:.0%})")
+        elif rel > tolerance:
+            mark = "IMPROVED (stale baseline)"
+            problems.append(f"{name}: {path} improved {rel:+.1%} beyond the "
+                            f"band ({base:.2f} -> {cur:.2f}) — rerun with "
+                            "--update and commit the new baseline")
+        print(f"  {name}: {path:45s} {base:12.2f} -> {cur:12.2f} "
+              f"({rel:+6.1%}) {mark}")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Compare bench results against committed baselines")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="relative tolerance band (default 0.15 = ±15%%)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite baselines from the current results")
+    ap.add_argument("files", nargs="*", default=[],
+                    help=f"results files to check (default: all of "
+                         f"{sorted(SPECS)})")
+    args = ap.parse_args(argv)
+    names = args.files or sorted(SPECS)
+    unknown = [n for n in names if n not in SPECS]
+    if unknown:
+        print(f"unknown results files {unknown} (known: {sorted(SPECS)})")
+        return 1
+    problems = []
+    for name in names:
+        problems.extend(check_file(name, args.tolerance, args.update))
+    if problems:
+        print("\nbench_check FAILED:")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    verdict = ("baselines updated" if args.update
+               else "all metrics within tolerance")
+    print(f"\nbench_check: {verdict} ({len(names)} file(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
