@@ -10,7 +10,7 @@ import sys
 import time
 
 ALL = ["tightloop", "training", "batch_times", "connections", "backends",
-       "ramp", "multihost", "roofline"]
+       "ramp", "multihost", "scenarios", "roofline"]
 
 
 def main() -> None:

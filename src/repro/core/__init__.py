@@ -14,7 +14,8 @@ from .kvstore import DataRow, KVStore, MetaRow, make_uuid, token_of
 from .loader import CassandraLoader, LoaderConfig, consume_with_step_time, tight_loop
 from .multihost import MultiHostConfig, MultiHostRun
 from .netsim import (BACKENDS, CASSANDRA, SCYLLA, TIERS, Clock, RealClock,
-                     VirtualClock)
+                     RouteProfile, RouteSchedule, VirtualClock,
+                     route_bdp_samples)
 from .placement import (PLACEMENT_POLICIES, global_order,
                         preferred_node_subsets, replica_local_fraction,
                         split_strips)
@@ -22,6 +23,8 @@ from .prefetcher import (EpochPlan, InOrderPrefetcher, OutOfOrderPrefetcher,
                          PrefetchConfig, compute_reflow, make_prefetcher)
 from .replication import (SAMPLING_MODES, HotKeyTracker, ReplicaCache,
                           Replication, ReplicationConfig, ZipfPlan)
+from .scenarios import (MODES, QUICK_MATRIX, SCENARIOS,
+                        OracleDepthController, Scenario, matrix, run_cell)
 from .splits import SplitSpec, check_entity_independence, create_splits
 
 __all__ = [
@@ -34,7 +37,10 @@ __all__ = [
     "make_uuid", "token_of", "CassandraLoader", "LoaderConfig",
     "MultiHostConfig", "MultiHostRun",
     "consume_with_step_time", "tight_loop", "BACKENDS", "CASSANDRA", "SCYLLA",
-    "TIERS", "Clock", "RealClock", "VirtualClock", "EpochPlan",
+    "TIERS", "Clock", "RealClock", "RouteProfile", "RouteSchedule",
+    "route_bdp_samples", "VirtualClock", "EpochPlan",
+    "Scenario", "SCENARIOS", "QUICK_MATRIX", "MODES",
+    "OracleDepthController", "matrix", "run_cell",
     "compute_reflow", "PLACEMENT_POLICIES", "global_order",
     "preferred_node_subsets", "replica_local_fraction", "split_strips",
     "InOrderPrefetcher", "OutOfOrderPrefetcher", "PrefetchConfig",

@@ -9,6 +9,10 @@ Extensions beyond the paper (flagged):
     seconds, a duplicate request is sent to another replica and the first
     response wins.  This is our straggler-mitigation addition for multi-node
     clusters; it is off by default to keep the paper-faithful baseline exact.
+    ``hedge_after="auto"`` derives the delay per fetch from the attached
+    flow controller's measured min-RTT (``FlowController.hedge_after``)
+    instead of a hand-tuned constant, and suppresses hedging during
+    PROBE_RTT drains (slow completions are expected while the queue drains).
 """
 
 from __future__ import annotations
@@ -47,7 +51,7 @@ class ConnectionPool:
 
     def __init__(self, clock: Clock, cluster: Cluster, route: RouteProfile | str,
                  io_threads: int = 8, conns_per_thread: int = 2, seed: int = 99,
-                 hedge_after: Optional[float] = None,
+                 hedge_after: "Optional[float | str]" = None,
                  materialize: bool = False,
                  client_ingress_bandwidth: float = NIC_BANDWIDTH,
                  preferred_nodes: Optional[Iterable[str]] = None,
@@ -55,6 +59,9 @@ class ConnectionPool:
                  on_exhausted: Optional[Callable] = None) -> None:
         if isinstance(route, str):
             route = TIERS[route]
+        if isinstance(hedge_after, str) and hedge_after != "auto":
+            raise ValueError(f"hedge_after must be a delay in seconds, None "
+                             f"or 'auto', got {hedge_after!r}")
         self.clock = clock
         self.cluster = cluster
         self.route = route
@@ -105,6 +112,31 @@ class ConnectionPool:
                                              name=self.route.name,
                                              limiter=limiter)
         return self.controller
+
+    def _hedge_delay(self) -> Optional[float]:
+        """Hedge delay for a fetch issued now: the configured constant, or —
+        ``"auto"`` — the controller's ``hedge_rtt_multiple x min_rtt``.
+        None disables the hedge for this fetch: auto mode has no delay until
+        a first RTT sample exists (hedging an unmeasured route is a guess)
+        and suppresses hedging during a PROBE_RTT drain (slow completions
+        are the drain working, not stragglers)."""
+        h = self.hedge_after
+        if h == "auto":
+            if self.controller is None or self.controller.in_drain():
+                return None
+            return self.controller.hedge_after()
+        return h
+
+    def admit(self, key: _uuid.UUID) -> bool:
+        """Per-route admission (``PrefetchConfig.route_admission``): may one
+        more fetch be issued right now without pushing this route past its
+        measured budget?  Advisory — the prefetcher defers, never drops, and
+        force-issues when nothing is admissible.  Always true without a
+        controller (static mode has no per-route budget to consult); the
+        federated pool overrides this with the *serving member's* budget."""
+        if self.controller is None:
+            return True
+        return self.inflight < self.controller.budget()
 
     # -- routing ---------------------------------------------------------
     def _pick_connection(self, key: _uuid.UUID,
@@ -208,7 +240,8 @@ class ConnectionPool:
         first = self._pick_connection(key, rf=rf)
         attempt(first, False, frozenset())
 
-        if self.hedge_after is not None:
+        hedge_delay = self._hedge_delay()
+        if hedge_delay is not None:
             def maybe_hedge() -> None:
                 if state["done"]:
                     return
@@ -224,7 +257,7 @@ class ConnectionPool:
                     self.controller.on_hedge()
                 attempt(backup, True, frozenset({first}))
 
-            self.clock.schedule(self.hedge_after, maybe_hedge)
+            self.clock.schedule(hedge_delay, maybe_hedge)
 
     # -- introspection -------------------------------------------------------
     @property

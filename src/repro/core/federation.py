@@ -531,6 +531,7 @@ class FederatedConnectionPool:
         ).name
         self.cluster_failovers = 0         # fetches served off-owner
         self.duplicates_suppressed = 0     # late completions the once-guard ate
+        self.replica_hedges = 0            # WAN fetches hedged onto a replica
         # completion-attributed replica accounting: hits and the fetch
         # denominator both count when a fetch *delivers*, so the hit
         # fraction compares like with like (a fetch routed to a replica but
@@ -575,6 +576,42 @@ class FederatedConnectionPool:
             self.controller = FlowControllerGroup(members, batch_size)
         return self.controller
 
+    # -- admission / routing helpers ----------------------------------------
+    def _live_replica(self, key: _uuid.UUID,
+                      exclude: frozenset = frozenset()) -> Optional[str]:
+        """Cluster holding a live, current-version, *reachable* replica of
+        ``key`` — without consuming a cache hit or refreshing LRU recency
+        (advisory peeks must not distort the serving statistics)."""
+        rep = self.federation.replication
+        if rep is None:
+            return None
+        e = rep.cache.get(key)
+        if (e is not None and e.live
+                and e.version == self.federation.version_of(key)
+                and e.cluster not in exclude
+                and e.cluster in self.federation.clusters
+                and self.federation.clusters[e.cluster].alive_nodes()):
+            return e.cluster
+        return None
+
+    def _serving_member(self, key: _uuid.UUID) -> str:
+        """The member cluster a fetch issued *now* would target: a live
+        same-version replica first, then the owner's failover order."""
+        cl = self._live_replica(key)
+        if cl is not None:
+            return cl
+        return (self.federation.serving_cluster(key)
+                or self.federation.owner_of(key))
+
+    def admit(self, key: _uuid.UUID) -> bool:
+        """Per-key route admission (``PrefetchConfig.route_admission``),
+        resolved against the *serving member's* budget: a key whose home
+        sits behind a saturated WAN member is deferred while a key served
+        by the local member (or a local replica) is admitted — so issue
+        order follows per-route headroom, not plan order.  Advisory, like
+        the base pool's: the prefetcher defers bounded and force-issues."""
+        return self.pools[self._serving_member(key)].admit(key)
+
     # -- fetch --------------------------------------------------------------
     def fetch(self, key: _uuid.UUID,
               on_done: Callable) -> None:
@@ -583,7 +620,15 @@ class FederatedConnectionPool:
         live replica cluster when the owner is dark).  Delivery is
         exactly-once even when a hedge in a dying cluster races a
         cross-cluster failover — replica-served fetches share the same
-        once-guard and exhaustion path as owner-served ones."""
+        once-guard and exhaustion path as owner-served ones.
+
+        Replica-aware hedging: a fetch sent to a *WAN* member is hedged
+        against a live local replica when one exists at hedge time — the
+        window where a promotion lands while the WAN read is in flight.
+        The hedge delay comes from the WAN member's own pool
+        (``ConnectionPool._hedge_delay``: the configured constant, or the
+        member controller's measured min-RTT under ``hedge_after="auto"``),
+        and the once-guard arbitrates the race."""
         state = {"done": False}
 
         def once(res, replica_of=None) -> None:
@@ -635,6 +680,29 @@ class FederatedConnectionPool:
         if target != owner:
             self.cluster_failovers += 1
         self.pools[target].fetch(key, once)
+
+        # replica-aware hedge: the replica is checked at *fire* time, so a
+        # promotion that lands while the WAN read is in flight gets used
+        if rep is not None and target in self.federation.wan_clusters():
+            delay = self.pools[target]._hedge_delay()
+            if delay is not None:
+                def maybe_replica_hedge() -> None:
+                    if state["done"]:
+                        return
+                    cl = self._live_replica(key,
+                                            exclude=frozenset((target,)))
+                    if cl is None:
+                        return
+                    self.replica_hedges += 1
+                    ctl = self.pools[target].controller
+                    if ctl is not None:
+                        ctl.on_hedge()   # the WAN member is the slow one
+                    rf = (rep.cfg.replica_rf
+                          or len(self.federation.clusters[cl].nodes))
+                    self.pools[cl].fetch(
+                        key, lambda res: once(res, replica_of=cl), rf=rf)
+
+                self.clock.schedule(delay, maybe_replica_hedge)
 
     def _maybe_promote(self, key: _uuid.UUID, owner: str, rep) -> None:
         """Start a promotion copy when ``key`` is hot, lives off-region, and

@@ -64,15 +64,40 @@ class FlowControlConfig:
     # max-rate BDP is what the *best* connection needs; stragglers need
     # slack) while staying under the 2x no-over-buffering bound
     beta: float = 0.7             # multiplicative decrease on congestion
-    rtt_inflation: float = 2.0    # smoothed-RTT backoff threshold (x min_rtt)
+    # Smoothed-RTT backoff threshold: back off when the RTT EMA exceeds
+    # ``rtt_inflation x (min_rtt + budget / delivery_rate)`` — propagation
+    # plus the serialization time of our own standing load.  (Against bare
+    # min_rtt, a transfer-dominated route would read its *normal* batch-
+    # burst service time as congestion and pin the budget at the floor.)
+    rtt_inflation: float = 2.0
     rate_window: float = 0.25     # delivery-rate bucket width, seconds
     rate_buckets: int = 8         # max-filter horizon, in buckets
     rtt_window: float = 10.0      # min-RTT filter horizon, seconds
-    # BBR-style PROBE_RTT: with gain > 1 a standing queue can inflate every
-    # RTT sample (the min filter never sees the drained route), which feeds
-    # back into the BDP estimate.  Periodically drop the budget to the floor
-    # for ~2 RTTs so the queue drains and min-RTT re-anchors to the wire.
+    # BBR-style PROBE_RTT: the min-RTT anchor only moves *down* on a
+    # queue-free sample, so periodically drop the budget to the floor for
+    # ~1 RTT — long enough to drain the at-most ``(gain - 1) x BDP``
+    # standing queue — to let an improved route show itself.  The interval
+    # is a *minimum*: the actual cadence is
+    # ``max(probe_rtt_interval, 10 x min_rtt)``, so on a route whose RTT
+    # dwarfs the configured interval (e.g. after a schedule-driven latency
+    # spike) the ~1-RTT drain stays a bounded ~10% overhead instead of
+    # becoming a permanent drain cycle.
     probe_rtt_interval: float = 5.0
+    # Regime-shift detection (time-varying routes): when ``regime_buckets``
+    # consecutive *completed* min-RTT buckets each sit above
+    # ``regime_factor x`` the filter minimum, the route itself has moved (a
+    # sustained latency shift, not a transient queue).  The pre-shift
+    # buckets are dropped so the min re-anchors to the new regime — instead
+    # of a stale pre-degradation minimum pinning the budget (and firing the
+    # rtt_inflation backoff on every completion) until the whole
+    # ``rtt_window`` expires — and the controller re-enters slow start to
+    # re-probe the new BDP quickly.
+    regime_factor: float = 3.0
+    regime_buckets: int = 2
+    # Adaptive hedging: ``FlowController.hedge_after()`` returns
+    # ``hedge_rtt_multiple x min_rtt`` — a straggler is a fetch taking
+    # several drained-route RTTs, whatever the route's scale.
+    hedge_rtt_multiple: float = 4.0
 
     def __post_init__(self) -> None:
         if self.floor_batches < 1:
@@ -96,6 +121,15 @@ class FlowControlConfig:
         if self.probe_rtt_interval <= 0.0:
             raise ValueError(f"probe_rtt_interval must be positive, "
                              f"got {self.probe_rtt_interval}")
+        if self.regime_factor <= 1.0:
+            raise ValueError(f"regime_factor must be > 1, "
+                             f"got {self.regime_factor}")
+        if self.regime_buckets < 1:
+            raise ValueError(f"regime_buckets must be >= 1, "
+                             f"got {self.regime_buckets}")
+        if self.hedge_rtt_multiple <= 1.0:
+            raise ValueError(f"hedge_rtt_multiple must be > 1, "
+                             f"got {self.hedge_rtt_multiple}")
 
 
 class SharedIngressLimiter:
@@ -156,6 +190,15 @@ class FlowController:
         self._rtt_mins: Deque[List[float]] = deque()
         self._rtt_ema: Optional[float] = None
         self._min_rtt_hint: Optional[float] = None  # checkpoint re-seed
+        # min-RTT *anchor*: the lowest RTT seen since the last regime
+        # shift.  The windowed filter alone is unstable under a standing
+        # queue (gain > 1): once every sample in the window is queue-
+        # inflated, the windowed min drifts up, which raises the BDP cap,
+        # which deepens the queue — positive feedback that runs the budget
+        # away between PROBE_RTT drains.  The anchor pins the BDP term and
+        # the backoff threshold to propagation delay; only a confirmed
+        # regime shift (or a lower sample) may move it.
+        self._rtt_anchor: Optional[float] = None
         self._avg_bytes: Optional[float] = None
         # in-flight load EMA (fed by the pool at issue time): the gap
         # between the budget and this is the route's *spare* BDP — the
@@ -165,11 +208,13 @@ class FlowController:
         self._cooldown_until = -math.inf
         self._next_probe_rtt = cfg.probe_rtt_interval
         self._drain_until = -math.inf
+        self._regime_streak = 0
         # counters / traces
         self.completions = 0
         self.backoffs = 0                 # RTT-inflation backoffs
         self.loss_signals = 0             # failover/hedge backoffs
         self.rtt_probes = 0               # PROBE_RTT drains
+        self.regime_shifts = 0            # confirmed route regime shifts
         self.budget_trace: List[tuple] = []   # (t, budget_samples) on change
 
     # -- signal intake ------------------------------------------------------
@@ -178,12 +223,16 @@ class FlowController:
         """One fetch finished: an RTT sample plus a delivery event."""
         rtt = max(t_done - t_issued, 1e-9)
         self.completions += 1
+        if self._rtt_anchor is None or rtt < self._rtt_anchor:
+            self._rtt_anchor = rtt
         # min-RTT filter (bucketed so the deque stays bounded on fast routes)
         width = self.cfg.rtt_window / 4.0
         b = math.floor(t_done / width) * width
         if self._rtt_mins and self._rtt_mins[-1][0] == b:
             self._rtt_mins[-1][1] = min(self._rtt_mins[-1][1], rtt)
         else:
+            if self._rtt_mins:
+                self._regime_check()    # the previous bucket just completed
             self._rtt_mins.append([b, rtt])
         while self._rtt_mins[0][0] < t_done - self.cfg.rtt_window:
             self._rtt_mins.popleft()
@@ -220,21 +269,88 @@ class FlowController:
             # completion compounds to +1 batch per RTT (TCP's MSS/cwnd)
             self._probe_cap += self.batch_size / max(self._probe_cap, 1.0)
         self._probe_cap = min(self._probe_cap, self._ceiling)
-        # queueing-delay congestion signal
+        # queueing-delay congestion signal.  The expected RTT under our own
+        # standing load is propagation plus the time the budget takes to
+        # serialize at the measured delivery rate — on transfer-dominated
+        # routes that serialization term dwarfs the propagation min, so
+        # comparing the smoothed RTT against ``inflation x min_rtt`` alone
+        # would read normal batch-burst service as congestion and pin the
+        # budget at the floor.
         min_rtt = self.min_rtt()
-        if (min_rtt is not None and self._rtt_ema is not None
-                and self._rtt_ema > self.cfg.rtt_inflation * min_rtt
-                and t_done >= self._cooldown_until):
-            self.backoffs += 1
-            self._back_off(t_done, min_rtt)
-        # PROBE_RTT: periodically drain the self-inflicted queue so the
-        # min-RTT filter re-anchors (skipped when already at the floor —
-        # nothing to drain)
+        rate = self.delivery_rate()
+        if min_rtt is not None and self._rtt_ema is not None:
+            expected = min_rtt + (
+                self._budget_raw(ignore_drain=True) / rate
+                if rate else 0.0)
+            if (self._rtt_ema > self.cfg.rtt_inflation * expected
+                    and t_done >= self._cooldown_until):
+                self.backoffs += 1
+                self._back_off(t_done, min_rtt)
+        # PROBE_RTT: periodically drain the self-inflicted queue so a
+        # *lower* propagation delay can show itself (the anchor only moves
+        # down on a queue-free sample; upward moves go through regime
+        # detection).  Skipped when already at the floor — nothing to drain.
         if t_done >= self._next_probe_rtt and t_done >= self._drain_until:
-            self._next_probe_rtt = t_done + self.cfg.probe_rtt_interval
+            # RTT-aware cadence (see FlowControlConfig.probe_rtt_interval):
+            # a ~1-RTT drain (the standing queue at the cap is at most
+            # (gain - 1) x BDP) every >= 10 RTTs caps drain overhead at
+            # ~10% no matter how far a schedule has pushed the route's RTT
+            self._next_probe_rtt = t_done + max(
+                self.cfg.probe_rtt_interval, 10.0 * (min_rtt or 0.0))
             if self._budget_raw(ignore_drain=True) > 1.25 * self._floor:
                 self.rtt_probes += 1
-                self._drain_until = t_done + 2.0 * max(min_rtt or 0.0, 1e-3)
+                self._drain_until = t_done + max(min_rtt or 0.0, 1e-3)
+        self._record()
+
+    def _regime_check(self) -> None:
+        """Called when a min-RTT bucket completes: has the route shifted?
+
+        A *completed* bucket whose minimum still sits far above the filter
+        minimum means not one sample in a whole bucket width touched the old
+        floor — a sustained move, not queueing noise (PROBE_RTT drains keep
+        standing queues out of the picture).  After ``regime_buckets``
+        such buckets in a row, drop the stale pre-shift evidence and
+        re-slow-start toward the new BDP."""
+        done_min = self._rtt_mins[-1][1]
+        overall = self.min_rtt()    # the anchor: propagation-delay floor
+        if not done_min > self.cfg.regime_factor * overall:
+            # Dead-band ratchet: a standing queue inflates samples by at
+            # most the budget gain, so a completed bucket whose *minimum*
+            # sits above ``gain x anchor`` proves the propagation delay
+            # itself moved — just not (yet) far enough for a full regime
+            # shift.  Raise the anchor to the safe under-estimate
+            # ``done_min / gain`` (true min >= that), letting the budget
+            # track slow ramps without a re-slow-start; without this the
+            # anchor pins the BDP term below a creeping route's real BDP
+            # and the budget spirals toward the floor.
+            if done_min > self.cfg.gain * overall:
+                self._rtt_anchor = done_min / self.cfg.gain
+                self._record()
+            self._regime_streak = 0
+            return
+        self._regime_streak += 1
+        if self._regime_streak < self.cfg.regime_buckets:
+            return
+        # Confirmed upward shift: keep only the new-regime buckets so the
+        # min filter re-anchors *now* instead of when rtt_window expires,
+        # drop any checkpoint hints (evidence from the old regime), and
+        # re-probe — the BDP under the new regime is unknown, so slow-start
+        # growth (+1 sample per completion) from the current cap finds it
+        # in O(log) RTTs instead of one additive batch per RTT.
+        self.regime_shifts += 1
+        self._regime_streak = 0
+        while len(self._rtt_mins) > self.cfg.regime_buckets:
+            self._rtt_mins.popleft()
+        self._rtt_anchor = min(m for _, m in self._rtt_mins)
+        self._min_rtt_hint = None
+        self._rate_hint = None
+        self._slow_start = True
+        # The filter just re-anchored to the new regime (and the budget sat
+        # near the floor through the detection window, so the surviving
+        # samples are queue-free) — a PROBE_RTT drain now would only stall
+        # the re-slow-start.  Defer it a full RTT-aware interval.
+        self._next_probe_rtt = self._clock.now() + max(
+            self.cfg.probe_rtt_interval, 10.0 * (self.min_rtt() or 0.0))
         self._record()
 
     def note_inflight(self, inflight: int) -> None:
@@ -268,6 +384,8 @@ class FlowController:
 
     # -- estimates ----------------------------------------------------------
     def min_rtt(self) -> Optional[float]:
+        if self._rtt_anchor is not None:
+            return self._rtt_anchor
         if self._rtt_mins:
             return min(m for _, m in self._rtt_mins)
         return self._min_rtt_hint
@@ -289,6 +407,26 @@ class FlowController:
 
     def avg_sample_bytes(self) -> Optional[float]:
         return self._avg_bytes
+
+    def hedge_after(self) -> Optional[float]:
+        """Adaptive hedge delay: ``hedge_rtt_multiple x min_rtt``.
+
+        A straggler is a fetch taking several drained-route RTTs —
+        whatever the route's scale — so the hedge trigger tracks the
+        measured RTT instead of a hand-tuned constant (and tracks regime
+        shifts along with the min filter).  ``None`` until a first RTT
+        sample exists: hedging against an unmeasured route is a guess."""
+        min_rtt = self.min_rtt()
+        if min_rtt is None:
+            return None
+        return self.cfg.hedge_rtt_multiple * min_rtt
+
+    def in_drain(self) -> bool:
+        """True inside a PROBE_RTT drain window.  Hedging is suppressed
+        there: the standing queue is being drained on purpose, so slow
+        completions are expected, and a duplicate fetch would both refill
+        the queue and feed the controller a bogus loss signal."""
+        return self._clock.now() < self._drain_until
 
     def spare_bdp_samples(self) -> float:
         """Unused in-flight headroom: operating budget minus the measured
@@ -312,7 +450,14 @@ class FlowController:
         cap = self._probe_cap
         bdp = self.bdp_samples()
         if bdp is not None:
-            cap = min(cap, self.cfg.gain * bdp)
+            # + one batch: issue is batch-quantized, so the pipe needs the
+            # next batch already in flight while a completed one hands over
+            # (TCP's cwnd = BDP + MSS).  Without it, a route whose BDP
+            # falls just under one batch pins at depth 1, where handover
+            # gaps idle the pipe — and the delivery-rate filter, measuring
+            # only what the throttled pipe delivers, can never prove the
+            # capacity needed to lift the cap back out.
+            cap = min(cap, self.cfg.gain * bdp + self.batch_size)
         if self._limiter is not None:
             cap = min(cap, self._limiter.fair_cap_samples(self))
         return min(max(cap, self._floor), self._ceiling)
@@ -393,6 +538,7 @@ class FlowController:
             "backoffs": self.backoffs,
             "loss_signals": self.loss_signals,
             "rtt_probes": self.rtt_probes,
+            "regime_shifts": self.regime_shifts,
             "completions": self.completions,
         }
 

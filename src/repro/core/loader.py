@@ -16,7 +16,7 @@ from .cluster import Cluster
 from .connection import ConnectionPool
 from .flowctl import FlowControlConfig
 from .kvstore import KVStore
-from .netsim import Clock, RealClock, TIERS, VirtualClock
+from .netsim import Clock, RealClock, VirtualClock
 from .prefetcher import EpochPlan, PrefetchConfig, make_prefetcher
 
 
@@ -31,11 +31,15 @@ class LoaderConfig:
     out_of_order: bool = True
     incremental_ramp: bool = True
     ramp_every: int = 4
-    route: str = "high"             # local | low | med | high
+    # route tier name (local | low | med | high) or a RouteProfile — e.g. a
+    # schedule-carrying dynamic route from core/scenarios.py
+    route: "str | object" = "high"
     backend: str = "scylla"         # scylla | cassandra
     n_nodes: int = 1
     replication_factor: int = 1
-    hedge_after: Optional[float] = None
+    # seconds, None, or "auto" (delay = controller min-RTT x
+    # hedge_rtt_multiple; needs flow_control="adaptive")
+    hedge_after: "Optional[float | str]" = None
     seed: int = 0
     shard_id: int = 0               # per-host / per-GPU shard of the UUID list
     num_shards: int = 1
@@ -50,6 +54,9 @@ class LoaderConfig:
     # FlowController (core/flowctl.py) between the pool and the prefetcher.
     flow_control: str = "static"
     flow: Optional[FlowControlConfig] = None
+    # Per-key route admission in the prefetcher (see PrefetchConfig):
+    # defer keys whose serving route is at its measured budget.
+    route_admission: bool = False
 
 
 class CassandraLoader:
@@ -73,7 +80,7 @@ class CassandraLoader:
         # ``ingress`` shares one client NIC across co-located loaders
         # (multi-host shared_client_ingress); None keeps a private NIC.
         self.pool = pool or ConnectionPool(
-            self.clock, self.cluster, TIERS[cfg.route],
+            self.clock, self.cluster, cfg.route,
             io_threads=cfg.io_threads, conns_per_thread=cfg.conns_per_thread,
             seed=cfg.seed + 11 + 7919 * cfg.shard_id,
             hedge_after=cfg.hedge_after,
@@ -91,7 +98,8 @@ class CassandraLoader:
                               incremental_ramp=cfg.incremental_ramp,
                               ramp_every=cfg.ramp_every,
                               flow_control=cfg.flow_control,
-                              flow=cfg.flow)
+                              flow=cfg.flow,
+                              route_admission=cfg.route_admission)
         # Adaptive flow control: the pool measures (RTT + delivery rate per
         # completion), the controller budgets, the prefetcher obeys.  A pool
         # that already carries a controller (MultiHostRun's shared-ingress

@@ -117,11 +117,16 @@ class MultiHostConfig:
     out_of_order: bool = True
     incremental_ramp: bool = True
     ramp_every: int = 4
-    route: str = "high"
+    # route tier name or a RouteProfile (schedule-carrying dynamic routes)
+    route: "str | object" = "high"
     backend: str = "scylla"
     n_nodes: int = 4
     replication_factor: int = 2
-    hedge_after: Optional[float] = 1.0   # stragglers + failover need hedging
+    # Hedge delay in seconds, None (no hedging), or "auto" — with adaptive
+    # flow control, derive the delay per fetch from the controller's
+    # measured min-RTT (see FlowControlConfig.hedge_rtt_multiple) so the
+    # trigger tracks the route instead of needing hand-tuning per tier.
+    hedge_after: "Optional[float | str]" = 1.0
     seed: int = 0
     materialize: bool = False
     # Shared-cluster capacity: per-node NIC/disk.  The default is the paper's
@@ -166,6 +171,19 @@ class MultiHostConfig:
     # deliberately does not hold, see core/replication.py:ZipfPlan).
     sampling: str = "uniform"
     zipf_s: float = 1.05
+    # Moving hotset: rotate the Zipf rank->key map every this many epochs
+    # (see ZipfPlan.shift_every) — the workload class replica demotion
+    # (ReplicationConfig.demote_after) exists for.  None = fixed hotset.
+    zipf_shift_every: Optional[int] = None
+    # Ownership-rebalance cadence: every this many rounds, ``run()`` invokes
+    # ``rebalance()`` with its default step — so a route whose measured
+    # spare BDP drifts (schedules, outages) sheds keyspace weight without
+    # the caller scripting it.  Requires a federation + adaptive flow
+    # control.  None = caller-invoked only (the pre-cadence behaviour).
+    rebalance_every: Optional[int] = None
+    # Per-key route admission in the prefetcher (see PrefetchConfig):
+    # requires adaptive flow control to have per-route budgets to consult.
+    route_admission: bool = False
 
     def loader_config(self, shard_id: int,
                       preferred_nodes: Optional[tuple] = None) -> LoaderConfig:
@@ -189,7 +207,8 @@ class MultiHostConfig:
             virtual_clock=True,
             preferred_nodes=preferred_nodes,
             flow_control=self.flow_control,
-            flow=self.flow)
+            flow=self.flow,
+            route_admission=self.route_admission)
 
 
 class MultiHostRun:
@@ -211,6 +230,21 @@ class MultiHostRun:
         if cfg.sampling not in SAMPLING_MODES:
             raise ValueError(f"unknown sampling mode {cfg.sampling!r} "
                              f"(choose from {SAMPLING_MODES})")
+        if cfg.rebalance_every is not None:
+            if cfg.rebalance_every < 1:
+                raise ValueError(f"rebalance_every must be >= 1, "
+                                 f"got {cfg.rebalance_every}")
+            if not cfg.clusters and not isinstance(cluster, FederatedCluster):
+                raise ValueError("rebalance_every needs a federation "
+                                 "(set MultiHostConfig.clusters)")
+            if cfg.flow_control != "adaptive":
+                raise ValueError("rebalance_every needs "
+                                 "flow_control='adaptive' (the spare-BDP "
+                                 "signal comes from the flow controllers)")
+        if cfg.hedge_after == "auto" and cfg.flow_control != "adaptive":
+            raise ValueError("hedge_after='auto' needs "
+                             "flow_control='adaptive' (the delay comes from "
+                             "the controller's min-RTT)")
         self.cfg = cfg
         self.clock = clock or VirtualClock()
         if cluster is not None:
@@ -248,7 +282,8 @@ class MultiHostRun:
             # skewed workload: every host samples the same global rank->key
             # map with replacement; placement strips don't apply (there is
             # no exactly-once delivery set), preferred-node routing does.
-            plans = [ZipfPlan(uuids, cfg.seed, i, cfg.n_hosts, s=cfg.zipf_s)
+            plans = [ZipfPlan(uuids, cfg.seed, i, cfg.n_hosts, s=cfg.zipf_s,
+                              shift_every=cfg.zipf_shift_every)
                      for i in range(cfg.n_hosts)]
         elif cfg.placement in RING_POLICIES:
             strips = _steady_strips(uuids, cfg.seed, cfg.n_hosts,
@@ -353,7 +388,10 @@ class MultiHostRun:
                  and len(shards) == len(self.loaders)
                  and checkpoint.get("seed", self.cfg.seed) == self.cfg.seed
                  and checkpoint.get("zipf_s",
-                                    self.cfg.zipf_s) == self.cfg.zipf_s)
+                                    self.cfg.zipf_s) == self.cfg.zipf_s
+                 and checkpoint.get("zipf_shift_every",
+                                    self.cfg.zipf_shift_every)
+                 == self.cfg.zipf_shift_every)
         if exact:
             for ld, s in zip(self.loaders, shards):
                 ld.start(s["epoch"], s["cursor"])
@@ -536,9 +574,21 @@ class MultiHostRun:
                 batch = ld.next_batch(timeout=timeout)
                 if on_batch is not None:
                     on_batch(host_id, batch)
+            self.rounds_consumed += 1
+            # Runtime placement maintenance on the round cadence: demote
+            # replicas the hotset moved away from (no-op unless
+            # ReplicationConfig.demote_after is set), and re-derive the
+            # ownership map from the controllers' spare-BDP signal (no-op
+            # unless rebalance_every is set) — counted against the run's
+            # *total* rounds so the cadence survives repeated run() calls.
+            if (self.federation is not None
+                    and self.federation.replication is not None):
+                self.federation.replication.demote_cold(self.clock.now())
+            if (self.cfg.rebalance_every
+                    and self.rounds_consumed % self.cfg.rebalance_every == 0):
+                self.rebalance()
             if step_time > 0.0:
                 self.clock.sleep(step_time)
-        self.rounds_consumed += n_rounds
         return self._report(t0, bytes0, served0, egress0, counters0,
                             n_rounds)
 
@@ -693,6 +743,8 @@ class MultiHostRun:
         }
         if self.cfg.sampling == "zipf":
             ck["zipf_s"] = self.cfg.zipf_s
+            if self.cfg.zipf_shift_every is not None:
+                ck["zipf_shift_every"] = self.cfg.zipf_shift_every
         if self.federation is not None:
             ck["federation"] = self.federation.ring.metadata()
             # runtime placement state rides along: the rebalanced ownership

@@ -22,10 +22,11 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import math
 import threading
 import time as _time
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
@@ -164,13 +165,130 @@ class RealClock(Clock):
 
 
 # ---------------------------------------------------------------------------
-# Latency tiers (paper Sec. 4.2)
+# Latency tiers (paper Sec. 4.2) + time-varying route schedules
 # ---------------------------------------------------------------------------
+
+
+# Deterministic random-walk streams for RouteSchedule(kind="random_walk"):
+# cumulative standard-normal walks, generated in blocks and cached per seed so
+# a frozen schedule can be sampled at arbitrary times in O(1) without carrying
+# mutable state.  Block RNGs are seeded by (salt, seed, block) so extending
+# the cache never changes earlier values.
+_WALK_SALT = 0x52575357  # "RWSW"
+_WALK_BLOCK = 1024
+_WALK_CACHE: dict = {}
+
+
+def _walk_level(seed: int, k: int) -> float:
+    """Value of walk ``seed`` after ``k`` unit steps (k=0 -> 0.0)."""
+    if k <= 0:
+        return 0.0
+    cum = _WALK_CACHE.get(seed)
+    if cum is None:
+        cum = [0.0]
+        _WALK_CACHE[seed] = cum
+    while len(cum) <= k:
+        block = len(cum) // _WALK_BLOCK
+        rng = np.random.default_rng((_WALK_SALT, seed, block))
+        for step in rng.standard_normal(_WALK_BLOCK):
+            cum.append(cum[-1] + float(step))
+    return cum[k]
+
+
+SCHEDULE_PARAMS = ("bandwidth", "latency", "loss")
+SCHEDULE_KINDS = ("step", "ramp", "sinusoid", "random_walk")
+
+
+@dataclass(frozen=True)
+class RouteSchedule:
+    """One time-varying term of a route parameter.
+
+    A schedule is a pure function of time returning a multiplier applied to
+    the route's static ``param`` ("bandwidth" scales the per-connection
+    capacity ceiling, "latency" scales the RTT, "loss" scales the congestion
+    event rate).  Multiple schedules on the same parameter compose by
+    multiplication.  Kinds:
+
+    * ``step``     — ``factor`` on ``[at, until)``, 1.0 outside (link
+      degradation with a known end, e.g. a maintenance window);
+    * ``ramp``     — linear from 1.0 at ``at`` to ``factor`` at ``until``,
+      holding ``factor`` afterwards (slow congestion onset);
+    * ``sinusoid`` — ``1 + amplitude * sin(2*pi*(t - phase)/period)``
+      (diurnal-style oscillation);
+    * ``random_walk`` — ``exp(sigma * W(t / interval))`` for a standard
+      normal walk ``W`` seeded by ``seed`` (deterministic; same seed + time
+      always gives the same multiplier).
+
+    Multipliers are clamped to ``[MIN_MULT, MAX_MULT]`` so no schedule can
+    drive a parameter to zero or infinity — outages are modelled separately
+    as ``RouteProfile.outages`` windows, not as zero bandwidth.
+    """
+
+    param: str                       # "bandwidth" | "latency" | "loss"
+    kind: str                        # "step" | "ramp" | "sinusoid" | "random_walk"
+    factor: float = 1.0              # step/ramp target multiplier
+    at: float = 0.0                  # step/ramp start time, s
+    until: float = math.inf          # step end / ramp completion time, s
+    period: float = 60.0             # sinusoid period, s
+    amplitude: float = 0.0           # sinusoid relative swing, |a| < 1
+    phase: float = 0.0               # sinusoid time offset, s
+    sigma: float = 0.25              # random-walk per-step log deviation
+    interval: float = 1.0            # random-walk step duration, s
+    seed: int = 0                    # random-walk stream seed
+
+    MIN_MULT = 0.02
+    MAX_MULT = 50.0
+
+    def __post_init__(self) -> None:
+        if self.param not in SCHEDULE_PARAMS:
+            raise ValueError(f"param must be one of {SCHEDULE_PARAMS}")
+        if self.kind not in SCHEDULE_KINDS:
+            raise ValueError(f"kind must be one of {SCHEDULE_KINDS}")
+        if self.factor <= 0:
+            raise ValueError("factor must be > 0")
+        if self.kind == "ramp" and not (math.isfinite(self.until)
+                                        and self.until > self.at):
+            raise ValueError("ramp needs a finite until > at")
+        if self.until <= self.at and self.kind == "step":
+            raise ValueError("step needs until > at")
+        if self.period <= 0:
+            raise ValueError("period must be > 0")
+        if abs(self.amplitude) >= 1.0:
+            raise ValueError("|amplitude| must be < 1")
+        if self.sigma < 0 or self.interval <= 0:
+            raise ValueError("sigma must be >= 0 and interval > 0")
+
+    def multiplier(self, t: float) -> float:
+        if self.kind == "step":
+            m = self.factor if self.at <= t < self.until else 1.0
+        elif self.kind == "ramp":
+            if t <= self.at:
+                m = 1.0
+            elif t >= self.until:
+                m = self.factor
+            else:
+                frac = (t - self.at) / (self.until - self.at)
+                m = 1.0 + (self.factor - 1.0) * frac
+        elif self.kind == "sinusoid":
+            m = 1.0 + self.amplitude * math.sin(
+                2.0 * math.pi * (t - self.phase) / self.period)
+        else:  # random_walk
+            m = math.exp(self.sigma * _walk_level(self.seed,
+                                                  int(t / self.interval)))
+        return min(max(m, self.MIN_MULT), self.MAX_MULT)
 
 
 @dataclass(frozen=True)
 class RouteProfile:
-    """One client<->server route, mirroring the paper's experimental tiers."""
+    """One client<->server route, mirroring the paper's experimental tiers.
+
+    Static by default; attach ``schedules`` / ``outages`` to make the route
+    time-varying.  ``SimConnection`` and ``AIMDBandwidth`` sample the
+    multipliers at *event time* (never at connection setup), so a route's
+    behaviour under a schedule is a property of the clock, not of when the
+    connection happened to be created.  Routes with no schedules and no
+    outages take exactly the pre-schedule code paths (bit-identical runs).
+    """
 
     name: str
     rtt: float                      # round-trip time, seconds
@@ -183,6 +301,45 @@ class RouteProfile:
     burst_factor: float = 1.0       # loss multiplier while congested
     burst_on_mean: float = 0.0      # mean congested duration, s
     burst_off_mean: float = float("inf")  # mean clear duration, s
+    # Time-varying dynamics (empty = static route).
+    schedules: Tuple[RouteSchedule, ...] = ()
+    outages: Tuple[Tuple[float, float], ...] = ()  # (start, duration), s
+
+    def __post_init__(self) -> None:
+        # Tolerate lists from declarative configs; store as hashable tuples.
+        if not isinstance(self.schedules, tuple):
+            object.__setattr__(self, "schedules", tuple(self.schedules))
+        if not isinstance(self.outages, tuple):
+            object.__setattr__(self, "outages",
+                               tuple((float(s), float(d))
+                                     for s, d in self.outages))
+        for start, duration in self.outages:
+            if duration <= 0:
+                raise ValueError("outage duration must be > 0")
+
+    @property
+    def is_static(self) -> bool:
+        return not self.schedules and not self.outages
+
+    def multiplier(self, param: str, t: float) -> float:
+        m = 1.0
+        for s in self.schedules:
+            if s.param == param:
+                m *= s.multiplier(t)
+        return m
+
+    def bandwidth_multiplier(self, t: float) -> float:
+        return self.multiplier("bandwidth", t)
+
+    def latency_multiplier(self, t: float) -> float:
+        return self.multiplier("latency", t)
+
+    def loss_multiplier(self, t: float) -> float:
+        return self.multiplier("loss", t)
+
+    def down_at(self, t: float) -> bool:
+        return any(start <= t < start + duration
+                   for start, duration in self.outages)
 
 
 # Paper: Oregon / N.California / Stockholm from an Oregon p4d.24xlarge
@@ -234,6 +391,7 @@ class AIMDBandwidth:
         self._beta = 0.7
         # additive increase per RTT: reach capacity in ~200 RTTs from half.
         self._incr_per_rtt = self.capacity / 200.0
+        self._dynamic = not route.is_static
         # Markov congestion state
         self._congested = False
         self._t_switch = (rng.exponential(route.burst_off_mean)
@@ -257,9 +415,23 @@ class AIMDBandwidth:
         if nbytes <= 0:
             return 0.0
         self._advance_state(now)
-        t = nbytes / self.rate
+        if self._dynamic:
+            # Sample the route state at event time: a bandwidth schedule caps
+            # the usable rate for this transfer (the AIMD state itself is
+            # untouched, so the link recovers instantly when the cap lifts),
+            # a loss schedule scales the congestion-event rate, and a latency
+            # schedule stretches the RTT the additive increase is paced by.
+            cap_t = self.capacity * self._route.bandwidth_multiplier(now)
+            rate_eff = min(self.rate, cap_t)
+            rtt_eff = self._route.rtt * self._route.latency_multiplier(now)
+            loss_mult = self._route.loss_multiplier(now)
+        else:
+            rate_eff = self.rate
+            rtt_eff = self._route.rtt
+            loss_mult = 1.0
+        t = nbytes / rate_eff
         lpb = self._loss_per_byte * (self._route.burst_factor if self._congested
-                                     else 1.0)
+                                     else 1.0) * loss_mult
         if backlog_rtts > 2.0:
             lpb *= 1.0 + 0.4 * (backlog_rtts - 2.0)
         if lpb > 0.0:
@@ -268,7 +440,7 @@ class AIMDBandwidth:
                 self.rate = max(self.rate * (self._beta ** min(events, 8)),
                                 self.capacity * 0.01)
             else:
-                rtts = t / max(self._route.rtt, 1e-6)
+                rtts = t / max(rtt_eff, 1e-6)
                 self.rate = min(self.rate + self._incr_per_rtt * rtts, self.capacity)
         return t
 
@@ -357,17 +529,29 @@ EXPECTED_CONN_CAPACITY_DRAW = 0.925
 
 def route_bdp_samples(route: "RouteProfile | str", n_conns: int,
                       sample_bytes: float,
-                      backend: "BackendModel" = None) -> float:
+                      backend: "BackendModel" = None,
+                      t: Optional[float] = None) -> float:
     """True route BDP in *samples*, from first principles (the analytic
     yardstick the flow-control tests and benchmarks measure the controller
     against — not the controller's own estimate): expected bottleneck rate
     (connections, client NIC, node disk) times the effective round trip
-    (propagation + median service + one transfer)."""
+    (propagation + median service + one transfer).
+
+    With ``t`` given, any route schedules are applied at that instant — the
+    schedule-aware *oracle* BDP that ``bench_scenarios`` compares the
+    adaptive controller against.  Callers should treat outage windows
+    (``prof.down_at(t)``) separately: the BDP of a down link is moot."""
     prof = TIERS[route] if isinstance(route, str) else route
+    bw_mult = lat_mult = 1.0
+    if t is not None and not prof.is_static:
+        bw_mult = prof.bandwidth_multiplier(t)
+        lat_mult = prof.latency_multiplier(t)
     backend = backend or SCYLLA
-    rate_Bps = min(n_conns * prof.conn_capacity * EXPECTED_CONN_CAPACITY_DRAW,
+    conn_cap = prof.conn_capacity * bw_mult
+    rate_Bps = min(n_conns * conn_cap * EXPECTED_CONN_CAPACITY_DRAW,
                    NIC_BANDWIDTH, DISK_BANDWIDTH)
-    rtt_eff = prof.rtt + backend.base_service + sample_bytes / prof.conn_capacity
+    rtt_eff = (prof.rtt * lat_mult + backend.base_service
+               + sample_bytes / conn_cap)
     return rate_Bps / sample_bytes * rtt_eff
 
 
@@ -446,6 +630,7 @@ class SimConnection:
         self._clock = clock
         self._node = node
         self._route = route
+        self._dynamic = not route.is_static
         self._rng = rng
         self._bw = AIMDBandwidth(rng, route)
         self._wire = FifoResource(f"conn{conn_id}/wire")
@@ -478,14 +663,23 @@ class SimConnection:
         # with out-of-order timestamps would inflate queue waits.
         self.inflight += 1
         jitter = 1.0 + self._route.jitter * float(self._rng.uniform(-1.0, 1.0))
-        self._clock.schedule(0.5 * self._route.rtt * jitter,
+        self._clock.schedule(self._half_rtt(jitter),
                              self._at_server, nbytes, on_done, on_fail, jitter)
 
+    def _half_rtt(self, jitter: float) -> float:
+        """Half-RTT flight time, sampling any latency schedule at event time."""
+        rtt = self._route.rtt
+        if self._dynamic:
+            rtt *= self._route.latency_multiplier(self._clock.now())
+        return 0.5 * rtt * jitter
+
     def _at_server(self, nbytes: int, on_done, on_fail, jitter: float) -> None:
-        if self._node.down:
-            # Connection reset: the error travels back one half-RTT; the
-            # caller (ConnectionPool) is responsible for failing over.
-            self._clock.schedule(0.5 * self._route.rtt * jitter,
+        if self._node.down or (self._dynamic
+                               and self._route.down_at(self._clock.now())):
+            # Connection reset (node down, or the route is inside a scheduled
+            # outage window): the error travels back one half-RTT; the caller
+            # (ConnectionPool) is responsible for failing over / retrying.
+            self._clock.schedule(self._half_rtt(jitter),
                                  self._fail, on_fail)
             return
         t = self._clock.now()
@@ -511,7 +705,7 @@ class SimConnection:
     def _at_ingress(self, nbytes: int, on_done, jitter: float) -> None:
         t = self._clock.now()
         t_recv = self._client_ingress.acquire(t, nbytes)
-        t_done = t_recv + 0.5 * self._route.rtt * jitter   # response flight tail
+        t_done = t_recv + self._half_rtt(jitter)   # response flight tail
         self._clock.schedule(t_done - t, self._complete, nbytes, on_done)
 
     def _complete(self, nbytes: int, on_done: Callable[[float], None]) -> None:
@@ -533,7 +727,8 @@ class SimConnection:
 
 
 __all__ = [
-    "Clock", "VirtualClock", "RealClock", "RouteProfile", "TIERS",
+    "Clock", "VirtualClock", "RealClock", "RouteProfile", "RouteSchedule",
+    "SCHEDULE_PARAMS", "SCHEDULE_KINDS", "TIERS",
     "AIMDBandwidth", "FifoResource", "RateResource", "BackendModel",
     "SCYLLA", "CASSANDRA", "BACKENDS", "SimServerNode", "SimConnection",
     "NIC_BANDWIDTH", "DISK_BANDWIDTH", "EXPECTED_CONN_CAPACITY_DRAW",

@@ -76,11 +76,30 @@ class PrefetchConfig:
     # knobs are ignored (the controller's slow start is the ramp).
     flow_control: str = "static"
     flow: Optional[FlowControlConfig] = None
+    # Per-key route admission (out-of-order + adaptive only): before issuing
+    # a key, ask ``pool.admit(key)`` whether its *serving route* has
+    # in-flight headroom; keys whose route is at budget are deferred (up to
+    # one batch of lookahead) and plan-later keys on uncongested routes
+    # issue first — issue order is no longer forced to equal plan order.
+    # Deferral reorders, never drops: deferred keys re-try first on every
+    # fill, and when nothing is admissible the oldest is force-issued, so
+    # delivery (and the exactly-once plan property) is untouched.
+    route_admission: bool = False
 
     def __post_init__(self) -> None:
         if self.batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, "
                              f"got {self.batch_size}")
+        if self.route_admission:
+            if self.flow_control != "adaptive":
+                raise ValueError("route_admission needs "
+                                 "flow_control='adaptive' (admission "
+                                 "consults per-route controller budgets)")
+            if not self.out_of_order:
+                raise ValueError("route_admission needs out_of_order=True "
+                                 "(in-order assembly consumes in plan "
+                                 "order, so reordered issue just stalls "
+                                 "the head batch)")
         if self.num_buffers < 1:
             raise ValueError(f"num_buffers must be >= 1, "
                              f"got {self.num_buffers}")
@@ -352,6 +371,11 @@ class OutOfOrderPrefetcher(_PrefetcherBase):
         self._next_seq = 0
         self._stream: Optional[Iterator] = None
         self._cur_epoch = 0
+        # route-admission lookahead: (epoch, uuid) keys whose serving route
+        # was at budget when drawn — retried first on every fill
+        self._deferred: deque = deque()
+        self.deferrals = 0                    # keys deferred at least once
+        self.forced_issues = 0                # force-issued (nothing admissible)
 
     def start(self, epoch: int = 0, cursor: int = 0) -> None:
         self._set_origin(epoch, cursor)
@@ -363,12 +387,52 @@ class OutOfOrderPrefetcher(_PrefetcherBase):
     def _fill(self) -> None:
         B = self.cfg.batch_size
         budget = self._target_depth() * B
-        while (self._samples_inflight + len(self._pool_arrived)
-               + self._assembling * B + len(self._ready) * B) < budget:
-            ep, u = next(self._stream)
+        if not self.cfg.route_admission:
+            while (self._samples_inflight + len(self._pool_arrived)
+                   + self._assembling * B + len(self._ready) * B) < budget:
+                ep, u = next(self._stream)
+                self._cur_epoch = ep
+                self._samples_inflight += 1
+                self.pool.fetch(u, self._on_sample)
+            return
+        self._fill_with_admission(budget)
+
+    def _fill_with_admission(self, budget: int) -> None:
+        """Budget fill with per-key route admission: deferred keys (their
+        route was at budget) retry first; fresh keys that fail admission
+        join the deferral window; once the window holds a full batch with
+        nothing admissible, the oldest key is force-issued — admission
+        shapes issue *order*, the global budget alone decides *volume*, so
+        the fill can never stall behind one saturated route."""
+        B = self.cfg.batch_size
+
+        def issue(ep: int, u: _uuid.UUID) -> None:
             self._cur_epoch = ep
             self._samples_inflight += 1
             self.pool.fetch(u, self._on_sample)
+
+        while (self._samples_inflight + len(self._pool_arrived)
+               + self._assembling * B + len(self._ready) * B) < budget:
+            issued = False
+            for _ in range(len(self._deferred)):
+                ep, u = self._deferred.popleft()
+                if self.pool.admit(u):
+                    issue(ep, u)
+                    issued = True
+                    break
+                self._deferred.append((ep, u))
+            if issued:
+                continue
+            if len(self._deferred) >= B:
+                self.forced_issues += 1
+                issue(*self._deferred.popleft())
+                continue
+            ep, u = next(self._stream)
+            if self.pool.admit(u):
+                issue(ep, u)
+            else:
+                self.deferrals += 1
+                self._deferred.append((ep, u))
 
     def _on_sample(self, res: FetchResult) -> None:
         self._samples_inflight -= 1

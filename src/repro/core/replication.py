@@ -84,11 +84,20 @@ class ReplicationConfig:
     # point of promoting is that a handful of keys saturating two nodes'
     # NICs becomes k keys spread over the whole region cluster.
     replica_rf: int = 0
+    # Hotset-shift demotion: a live replica whose key has cooled below the
+    # hot threshold AND not served a read for this many seconds is dropped
+    # (``ReplicaCache.demote_cold``), freeing capacity for the keys the
+    # workload moved on to — instead of waiting for LRU eviction pressure,
+    # which only fires once the cache is full.  None = never demote.
+    demote_after: Optional[float] = None
 
     def __post_init__(self) -> None:
         if self.replica_rf < 0:
             raise ValueError(f"replica_rf must be >= 0, "
                              f"got {self.replica_rf}")
+        if self.demote_after is not None and self.demote_after <= 0.0:
+            raise ValueError(f"demote_after must be positive, "
+                             f"got {self.demote_after}")
         if self.track_k < 1:
             raise ValueError(f"track_k must be >= 1, got {self.track_k}")
         if self.window <= 0.0:
@@ -250,6 +259,7 @@ class ReplicaCache:
         self.promotions = 0         # copies committed (entry went live)
         self.invalidations = 0
         self.evictions = 0
+        self.demotions = 0          # live entries dropped on hotset shift
         self._next_token = 1
 
     def __len__(self) -> int:
@@ -336,6 +346,23 @@ class ReplicaCache:
             return True
         return False
 
+    def demote_cold(self, now: float, is_hot, demote_after: float) -> int:
+        """Drop live replicas the hotset has moved away from: entries whose
+        key is no longer hot (``is_hot(key)`` — the tracker's windowed
+        judgment) and whose last served read is older than ``demote_after``.
+        In-flight promotions are never touched (their commit callback still
+        owns the reservation token).  Dropping an entry is always safe for
+        consistency — the next access just falls through to the home
+        cluster — so demotion can only reclaim capacity, never introduce a
+        stale read.  Returns the number demoted."""
+        cold = [k for k, e in self._entries.items()
+                if e.live and now - e.last_hit >= demote_after
+                and not is_hot(k)]
+        for k in cold:
+            del self._entries[k]
+        self.demotions += len(cold)
+        return len(cold)
+
     # -- checkpoint ---------------------------------------------------------
     def snapshot(self) -> Dict[str, Dict]:
         """Live entries only — an in-flight copy does not survive a restore
@@ -370,6 +397,15 @@ class Replication:
         self.promotion_wan_bytes = 0    # copy traffic (the cost of promotion)
         self.promotions_aborted = 0     # home cluster dark mid-copy
 
+    def demote_cold(self, now: float) -> int:
+        """Demote replicas the tracked hotset has shifted away from (no-op
+        unless ``cfg.demote_after`` is set).  Called on the multi-host run's
+        round cadence; any caller with a clock may invoke it directly."""
+        if self.cfg.demote_after is None:
+            return 0
+        return self.cache.demote_cold(now, self.tracker.is_hot,
+                                      self.cfg.demote_after)
+
     def report(self) -> Dict:
         c = self.cache
         return {
@@ -382,6 +418,7 @@ class Replication:
             "promotions_aborted": self.promotions_aborted,
             "invalidations": c.invalidations,
             "evictions": c.evictions,
+            "demotions": c.demotions,
             "promotion_wan_bytes": self.promotion_wan_bytes,
         }
 
@@ -412,22 +449,36 @@ class ZipfPlan:
     Exactly-once per epoch does NOT hold here (with-replacement sampling is
     the workload).  Consequently elastic restores resume at an epoch
     boundary without reflow, and per-epoch overrides are rejected.
+
+    ``shift_every`` models a *moving* hotset (curriculum phases, tenant
+    churn): every ``shift_every`` epochs the rank->key map rotates by a
+    fixed stride larger than any tracked top-k, so the previous hot keys go
+    cold and a disjoint set becomes hot — the workload that exercises
+    replica demotion (``ReplicaCache.demote_cold``).  The rotation is a
+    pure function of ``(seed, epoch)``, so it is deterministic, identical
+    on every host, and survives elastic resizes like the base map does.
     """
 
     def __init__(self, uuids: List[_uuid.UUID], seed: int = 0,
                  shard_id: int = 0, num_shards: int = 1,
-                 s: float = 1.05) -> None:
+                 s: float = 1.05, shift_every: Optional[int] = None) -> None:
         if num_shards < 1 or not 0 <= shard_id < num_shards:
             raise ValueError(f"bad shard spec {shard_id}/{num_shards}")
         if s <= 0.0:
             raise ValueError(f"zipf exponent must be positive, got {s}")
         if not uuids:
             raise ValueError("ZipfPlan needs a non-empty dataset")
+        if shift_every is not None and shift_every < 1:
+            raise ValueError(f"shift_every must be >= 1, got {shift_every}")
         self._uuids = global_order(uuids, seed, 1)   # resize-invariant map
         self._seed = seed
         self.shard_id = shard_id
         self.num_shards = num_shards
         self.s = s
+        self.shift_every = shift_every
+        # golden-ratio-conjugate stride: consecutive rotations land far
+        # apart, so hotsets stay disjoint for many shifts before wrapping
+        self._shift_stride = max(1, int(round(len(self._uuids) * 0.381966)))
         lo, hi = strip_bounds(len(uuids), num_shards)[shard_id]
         self._epoch_len = hi - lo
         if self._epoch_len == 0:
@@ -447,6 +498,11 @@ class ZipfPlan:
     def permutation(self, epoch: int) -> List[_uuid.UUID]:
         rng = np.random.default_rng((self._seed, self.shard_id, epoch))
         idx = rng.choice(len(self._uuids), size=self._epoch_len, p=self._p)
+        if self.shift_every:
+            n = len(self._uuids)
+            offset = (epoch // self.shift_every) * self._shift_stride % n
+            if offset:
+                return [self._uuids[(i + offset) % n] for i in idx]
         return [self._uuids[i] for i in idx]
 
     def iter_from(self, epoch: int, cursor: int):

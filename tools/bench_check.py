@@ -25,6 +25,7 @@ Usage (CI runs exactly this, see .github/workflows/ci.yml):
 
     PYTHONPATH=src python -m benchmarks.bench_ramp --flowctl --quick
     PYTHONPATH=src python -m benchmarks.bench_multihost --replication --quick
+    PYTHONPATH=src python -m benchmarks.bench_scenarios --quick
     python tools/bench_check.py
 
 Baseline update procedure (after an intentional perf change):
@@ -69,6 +70,22 @@ SPECS = {
             "zipf_MBps",
             "zipf_replicated_MBps",
             "replica_hit_frac",
+        ],
+    },
+    "scenarios.json": {
+        "context": ["quick", "n_samples", "static_sweep", "oracle_slack"],
+        "metrics": [
+            "matrix.adaptive_floor_ratio",
+            "matrix.cells.steady.oracle_MBps",
+            "matrix.cells.steady.ratios.adaptive",
+            "matrix.cells.bw_step.ratios.adaptive",
+            "matrix.cells.lat_spike.oracle_MBps",
+            "matrix.cells.lat_spike.ratios.adaptive",
+            "matrix.cells.lat_ramp.ratios.adaptive",
+            "matrix.cells.diurnal.ratios.adaptive",
+            "matrix.cells.outage_flash.ratios.adaptive",
+            "tracking.aggregate_MBps",
+            "tracking.replica_hit_frac",
         ],
     },
 }
