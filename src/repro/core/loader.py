@@ -127,9 +127,31 @@ class CassandraLoader:
         while True:
             yield self.next_batch()
 
+    @property
+    def started(self) -> bool:
+        """True once the prefetcher is running (public — consumers such as
+        ``DeviceFeed`` must not reach into ``prefetcher._started``)."""
+        return self.prefetcher.started
+
+    @property
+    def ready_batches(self) -> int:
+        """Assembled batches ``next_batch`` would return without blocking."""
+        return self.prefetcher.ready_batches
+
     # -- checkpointing ------------------------------------------------------
-    def state(self) -> dict:
-        return self.prefetcher.state()
+    def state(self, rewind_batches: int = 0) -> dict:
+        """Checkpointable position; ``rewind_batches`` backs off batches a
+        downstream buffer already pulled but the consumer never saw."""
+        return self.prefetcher.state(rewind_batches=rewind_batches)
+
+    def flow_snapshot(self) -> Optional[dict]:
+        """Flow-controller state to ride a checkpoint (None in static mode) —
+        a restore passes it back through :meth:`restore_flow` so adaptive
+        runs resume at the measured operating point instead of
+        re-slow-starting."""
+        if self.flow_controller is None:
+            return None
+        return self.flow_controller.snapshot()
 
     def restore_flow(self, state: Optional[dict]) -> None:
         """Re-seed the flow controller from a checkpoint snapshot (no-op in

@@ -285,6 +285,18 @@ class _PrefetcherBase:
         # 1 buffer at start; +1 extra every ramp_every consumed.
         return min(k, 1 + self.consumed // self.cfg.ramp_every)
 
+    @property
+    def started(self) -> bool:
+        """True once ``start()`` has run (public — consumers must not poke
+        at ``_started``)."""
+        return self._started
+
+    @property
+    def ready_batches(self) -> int:
+        """Assembled batches a ``next_batch`` call would return without
+        blocking — what the device feed consults for buffer-hit accounting."""
+        raise NotImplementedError
+
     # -- checkpoint/restart ------------------------------------------------
     def _set_origin(self, epoch: int, cursor: int) -> None:
         """Normalize a restart position: a cursor at/past the end of this
@@ -293,11 +305,19 @@ class _PrefetcherBase:
         honouring per-epoch override lengths during reshard transitions."""
         self._epoch0, self._cursor0 = self.plan.advance(epoch, cursor)
 
-    def state(self) -> dict:
-        """Loader position for fault-tolerant restart (batch granularity)."""
+    def state(self, rewind_batches: int = 0) -> dict:
+        """Loader position for fault-tolerant restart (batch granularity).
+
+        ``rewind_batches`` backs the cursor off by already-pulled batches a
+        downstream buffer (e.g. ``DeviceFeed``'s device queue) is holding
+        past the consumer: the checkpoint must record the *consumer-facing*
+        position, or a restore would silently skip those samples."""
+        if rewind_batches < 0:
+            raise ValueError(f"negative rewind_batches {rewind_batches}")
+        consumed = max(0, self.consumed - rewind_batches)
         epoch, cursor = self.plan.advance(
-            self._epoch0, self._cursor0, self.consumed * self.cfg.batch_size)
-        return {"epoch": epoch, "cursor": cursor, "consumed": self.consumed}
+            self._epoch0, self._cursor0, consumed * self.cfg.batch_size)
+        return {"epoch": epoch, "cursor": cursor, "consumed": consumed}
 
     def describe(self) -> str:
         mode = "OOO" if self.cfg.out_of_order else "in-order"
@@ -318,6 +338,11 @@ class InOrderPrefetcher(_PrefetcherBase):
         self._next_issue = 0
         self._next_consume = 0
         self._stream: Optional[Iterator] = None
+
+    @property
+    def ready_batches(self) -> int:
+        # in-order delivery: only the head-of-line batch counts as ready
+        return 1 if self._next_consume in self._ready else 0
 
     def start(self, epoch: int = 0, cursor: int = 0) -> None:
         self._set_origin(epoch, cursor)
@@ -376,6 +401,10 @@ class OutOfOrderPrefetcher(_PrefetcherBase):
         self._deferred: deque = deque()
         self.deferrals = 0                    # keys deferred at least once
         self.forced_issues = 0                # force-issued (nothing admissible)
+
+    @property
+    def ready_batches(self) -> int:
+        return len(self._ready)
 
     def start(self, epoch: int = 0, cursor: int = 0) -> None:
         self._set_origin(epoch, cursor)

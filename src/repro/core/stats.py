@@ -101,6 +101,91 @@ class LoaderStats:
                                         self.batch_nbytes)), window)
 
 
+class StepStats:
+    """Per-step data-stall accounting (Zolnouri et al., arxiv 2005.02130).
+
+    Where ``LoaderStats`` measures the *supply* side (batch delivery gaps),
+    ``StepStats`` measures what the accelerator actually sees: every train
+    step is split into *wait-for-batch* time (the consumer blocked on the
+    data pipeline) and *step-compute* time.  ``DeviceFeed`` feeds the wait
+    half (``on_wait`` per ``__next__``, flagging whether the batch was
+    served from the double buffer or had to block on the loader) and the
+    training loop feeds the compute half (``on_compute`` per step); steps
+    pair up positionally, so summaries only read the paired prefix.
+
+    All timestamps live on ONE clock — the loader's (virtual or real) — so
+    stall fractions are internally consistent even when the network is
+    simulated.
+    """
+
+    def __init__(self, clock=None) -> None:
+        self._clock = clock
+        self.wait_s: List[float] = []      # per-step wait-for-batch seconds
+        self.compute_s: List[float] = []   # per-step compute seconds
+        self.step_end_t: List[float] = []  # clock time at each step end
+        self.buffer_hits = 0               # __next__ served without blocking
+        self.blocked = 0                   # __next__ had to wait on the loader
+
+    # -- hooks -------------------------------------------------------------
+    def on_wait(self, wait: float, blocked: bool = True) -> None:
+        """One ``DeviceFeed.__next__``: seconds blocked on the loader."""
+        self.wait_s.append(float(wait))
+        if blocked:
+            self.blocked += 1
+        else:
+            self.buffer_hits += 1
+
+    def on_compute(self, compute: float, t_end: Optional[float] = None) -> None:
+        """Close the current step with its compute seconds."""
+        self.compute_s.append(float(compute))
+        if t_end is None:
+            t_end = self._clock.now() if self._clock is not None else 0.0
+        self.step_end_t.append(float(t_end))
+
+    # -- summaries ---------------------------------------------------------
+    @property
+    def steps(self) -> int:
+        """Completed (wait, compute) pairs."""
+        return min(len(self.wait_s), len(self.compute_s))
+
+    def _paired(self, skip: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+        n = self.steps
+        return (np.asarray(self.wait_s[skip:n], dtype=np.float64),
+                np.asarray(self.compute_s[skip:n], dtype=np.float64))
+
+    def stall_frac(self, skip: int = 0) -> float:
+        """Fraction of wall time the consumer spent waiting for data."""
+        w, c = self._paired(skip)
+        total = float(w.sum() + c.sum())
+        return float(w.sum()) / total if total > 0 else 0.0
+
+    def goodput_sps(self, batch_size: int, skip: int = 0) -> float:
+        """Samples/s actually trained (wait + compute in the denominator)."""
+        w, c = self._paired(skip)
+        total = float(w.sum() + c.sum())
+        return len(w) * batch_size / total if total > 0 else 0.0
+
+    def stall_windows(self, window: float = 0.5) -> List[Tuple[float, float]]:
+        """(t, stalled-seconds-per-second) over fixed windows — the
+        stall-rate mirror of ``LoaderStats.throughput_windows``."""
+        n = self.steps
+        return windowed_series(list(zip(self.step_end_t[:n],
+                                        self.wait_s[:n])), window)
+
+    def summary(self, batch_size: int, skip: int = 0) -> dict:
+        w, c = self._paired(skip)
+        return {
+            "steps": self.steps,
+            "skip": skip,
+            "stall_frac": self.stall_frac(skip),
+            "goodput_sps": self.goodput_sps(batch_size, skip),
+            "buffer_hits": self.buffer_hits,
+            "blocked": self.blocked,
+            "wait_s": summarize(w),
+            "compute_s": summarize(c),
+        }
+
+
 def summarize(values: np.ndarray) -> dict:
     if values.size == 0:
         return {"mean": 0.0, "std": 0.0, "p50": 0.0, "p99": 0.0, "max": 0.0}
@@ -110,4 +195,4 @@ def summarize(values: np.ndarray) -> dict:
             "max": float(values.max())}
 
 
-__all__ = ["LoaderStats", "summarize", "windowed_series"]
+__all__ = ["LoaderStats", "StepStats", "summarize", "windowed_series"]

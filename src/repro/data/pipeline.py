@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.loader import CassandraLoader
+from repro.core.stats import StepStats
 from repro.data.datasets import decode_token_record
 
 
@@ -44,16 +45,34 @@ def batch_to_numpy(batch, seq_len: int, pad_id: int = 0) -> Dict[str, np.ndarray
 
 
 class DeviceFeed:
-    """Iterator of device-resident batches with double buffering."""
+    """Iterator of device-resident batches with double buffering.
+
+    Beyond forming device arrays, the feed is the measurement point for
+    per-step data-stall accounting: every ``__next__`` reports to
+    ``step_stats`` (a ``core.stats.StepStats``) how long it blocked on the
+    loader — on the *loader's* clock, so virtual-clock sims and wall-clock
+    runs are both internally consistent — and whether the batch was served
+    straight from an already-assembled buffer.  The training loop closes
+    each step with ``step_stats.on_compute``.
+
+    The feed also owns the *consumer-facing* checkpoint position:
+    ``state()`` is the loader position rewound by the batches sitting in
+    the device queue (pulled past the loader cursor but never handed to the
+    trainer).  Checkpointing ``loader.state()`` directly would skip those
+    in-flight batches on restore; checkpointing ``feed.state()`` makes
+    restore exactly-once.
+    """
 
     def __init__(self, loader: CassandraLoader, seq_len: int,
                  shardings: Optional[Dict] = None, mesh=None,
-                 prefetch: int = 2) -> None:
+                 prefetch: int = 2,
+                 step_stats: Optional[StepStats] = None) -> None:
         self.loader = loader
         self.seq_len = seq_len
         self.shardings = shardings
         self.mesh = mesh
         self.prefetch = prefetch
+        self.step_stats = step_stats or StepStats(loader.clock)
         self._queue: collections.deque = collections.deque()
         self._started = False
 
@@ -69,23 +88,40 @@ class DeviceFeed:
                 out[k] = jax.device_put(v)
         return out
 
-    def _pull_one(self) -> None:
+    def _pull_one(self) -> tuple:
+        """Pull one batch from the loader onto the device queue.  Returns
+        ``(wait_seconds, buffer_hit)`` on the loader's clock."""
+        hit = self.loader.ready_batches > 0
+        clk = self.loader.clock
+        t0 = clk.now()
         batch = self.loader.next_batch()
+        wait = clk.now() - t0
         host = batch_to_numpy(batch, self.seq_len)
         self._queue.append((self._put(host), batch))
+        return wait, hit
+
+    # -- checkpointing ------------------------------------------------------
+    def state(self) -> dict:
+        """Consumer-facing loader position: the loader cursor rewound by the
+        device-queue batches the trainer has not consumed yet."""
+        return self.loader.state(rewind_batches=len(self._queue))
 
     def __iter__(self) -> Iterator:
         return self
 
     def __next__(self):
+        wait, hit = 0.0, True
         if not self._started:
-            if not self.loader.prefetcher._started:
+            if not self.loader.started:
                 self.loader.start()
             self._started = True
             for _ in range(self.prefetch):
-                self._pull_one()
+                w, h = self._pull_one()
+                wait += w
+                hit = hit and h
         dev_batch, meta = self._queue.popleft()
-        self._pull_one()                     # refill behind the consumer
+        w, h = self._pull_one()              # refill behind the consumer
+        self.step_stats.on_wait(wait + w, blocked=not (hit and h))
         return dev_batch, meta
 
 

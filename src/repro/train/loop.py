@@ -16,7 +16,7 @@ from typing import Callable, Dict, Optional
 import jax
 import numpy as np
 
-from repro.core import CassandraLoader, KVStore, LoaderConfig
+from repro.core import CassandraLoader, KVStore, LoaderConfig, VirtualClock
 from repro.data.pipeline import DeviceFeed
 from repro.train.checkpoint import CheckpointManager
 from repro.train.optimizer import OptimizerConfig
@@ -31,6 +31,12 @@ class TrainLoopConfig:
     checkpoint_every: int = 50
     checkpoint_dir: Optional[str] = None
     seed: int = 0
+    # Compute seconds charged to the timeline per step instead of the
+    # measured wall time of the jitted step.  With a virtual-clock loader
+    # this pins the consumer side of the simulation (deterministic stall /
+    # goodput numbers — what bench_training's goodput sweep gates on);
+    # None (default) charges the measured step time.
+    charge_step_time: Optional[float] = None
 
 
 def run_training(model, store: KVStore, uuids, loader_cfg: LoaderConfig,
@@ -38,7 +44,14 @@ def run_training(model, store: KVStore, uuids, loader_cfg: LoaderConfig,
                  opt_cfg: Optional[OptimizerConfig] = None,
                  state: Optional[Dict] = None,
                  on_metrics: Optional[Callable] = None) -> Dict:
-    """Train `model` from the network loader. Returns final state + history."""
+    """Train `model` from the network loader.
+
+    Returns ``{"state", "history", "stats", "step_stats"}`` — history
+    records carry ``loss``/``sps`` plus per-step data-stall accounting
+    (``stall_frac``, ``goodput_sps``), ``stats`` is the
+    ``StepStats.summary`` at skip=1 (the jit-compile step excluded) and
+    ``step_stats`` the raw ``core.stats.StepStats`` for custom skips.
+    """
     opt_cfg = opt_cfg or OptimizerConfig(total_steps=loop_cfg.total_steps)
     step_fn = jax.jit(make_train_step(model, opt_cfg), donate_argnums=(0,))
 
@@ -57,31 +70,63 @@ def run_training(model, store: KVStore, uuids, loader_cfg: LoaderConfig,
 
     loader = CassandraLoader(store, uuids, loader_cfg)
     loader.start(epoch=loader_pos["epoch"], cursor=loader_pos["cursor"])
+    # adaptive runs resume at the checkpointed operating point instead of
+    # re-slow-starting from scratch (no-op in static mode / old checkpoints)
+    loader.restore_flow(loader_pos.get("flow"))
     feed = DeviceFeed(loader, loop_cfg.seq_len)
+    ss = feed.step_stats
+    clk = loader.clock
+    virtual = isinstance(clk, VirtualClock)
+    B = loader_cfg.batch_size
+
+    def ckpt_extra() -> Dict:
+        # the *feed's* position (loader cursor rewound by device-queued
+        # batches) — checkpointing loader.state() directly would skip the
+        # in-flight batches on restore
+        pos = feed.state()
+        flow = loader.flow_snapshot()
+        if flow is not None:
+            pos["flow"] = flow
+        return {"loader": pos}
 
     history = []
-    t0 = time.time()
+    t0 = None                 # set after the first step: sps excludes the
+    #                           jit compile baked into step one
     for step in range(start_step, loop_cfg.total_steps):
         dev_batch, _meta = next(feed)
         batch = {"tokens": dev_batch["tokens"],
                  "loss_mask": dev_batch["loss_mask"]}
+        c0 = time.perf_counter()
         state, metrics = step_fn(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        compute = time.perf_counter() - c0
+        if loop_cfg.charge_step_time is not None:
+            compute = loop_cfg.charge_step_time
+        if virtual:
+            # charge compute to the sim timeline: in-flight transfers
+            # progress during the step, and wait/compute share one clock
+            clk.sleep(compute)
+        ss.on_compute(compute, t_end=clk.now())
+        if t0 is None:
+            t0 = time.time()
         if (step + 1) % loop_cfg.log_every == 0 or step == start_step:
             loss = float(metrics["loss"])
             rec = {"step": step + 1, "loss": loss,
-                   "sps": (step + 1 - start_step) * loader_cfg.batch_size
-                   / max(time.time() - t0, 1e-9)}
+                   "sps": (step - start_step) * B
+                   / max(time.time() - t0, 1e-9),
+                   "stall_frac": ss.stall_frac(skip=1),
+                   "goodput_sps": ss.goodput_sps(B, skip=1)}
             history.append(rec)
             if on_metrics:
                 on_metrics(rec)
         if ckpt and (step + 1) % loop_cfg.checkpoint_every == 0:
-            ckpt.save(step + 1, state,
-                      extra={"loader": loader.state()}, blocking=False)
+            ckpt.save(step + 1, state, extra=ckpt_extra(), blocking=False)
     if ckpt:
-        ckpt.save(loop_cfg.total_steps, state,
-                  extra={"loader": loader.state()}, blocking=True)
+        ckpt.save(loop_cfg.total_steps, state, extra=ckpt_extra(),
+                  blocking=True)
     loader.close()
-    return {"state": state, "history": history}
+    return {"state": state, "history": history,
+            "stats": ss.summary(B, skip=1), "step_stats": ss}
 
 
 __all__ = ["TrainLoopConfig", "run_training"]

@@ -26,6 +26,7 @@ Usage (CI runs exactly this, see .github/workflows/ci.yml):
     PYTHONPATH=src python -m benchmarks.bench_ramp --flowctl --quick
     PYTHONPATH=src python -m benchmarks.bench_multihost --replication --quick
     PYTHONPATH=src python -m benchmarks.bench_scenarios --quick
+    PYTHONPATH=src python -m benchmarks.bench_training --goodput --quick
     python tools/bench_check.py
 
 Baseline update procedure (after an intentional perf change):
@@ -70,6 +71,22 @@ SPECS = {
             "zipf_MBps",
             "zipf_replicated_MBps",
             "replica_hit_frac",
+        ],
+    },
+    "training_goodput.json": {
+        # stall-fraction bounds and the exactly-once restore property are
+        # boolean `checks` asserted by the bench itself (lower stall is
+        # better, so a ±band on it would flag improvements as regressions);
+        # the baselines guard the goodput numbers per cell
+        "context": ["quick", "n_steps", "n_samples", "batch_size",
+                    "step_time_s", "skip"],
+        "metrics": [
+            "cells.local.static.goodput_sps",
+            "cells.local.adaptive.goodput_sps",
+            "cells.med.static.goodput_sps",
+            "cells.med.adaptive.goodput_sps",
+            "cells.high.static.goodput_sps",
+            "cells.high.adaptive.goodput_sps",
         ],
     },
     "scenarios.json": {
