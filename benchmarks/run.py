@@ -10,7 +10,7 @@ import sys
 import time
 
 ALL = ["tightloop", "training", "batch_times", "connections", "backends",
-       "ramp", "multihost", "scenarios", "roofline"]
+       "ramp", "multihost", "scenarios", "tenancy", "roofline"]
 
 
 def main() -> None:

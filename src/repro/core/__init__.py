@@ -26,6 +26,7 @@ from .replication import (SAMPLING_MODES, HotKeyTracker, ReplicaCache,
 from .scenarios import (MODES, QUICK_MATRIX, SCENARIOS,
                         OracleDepthController, Scenario, matrix, run_cell)
 from .splits import SplitSpec, check_entity_independence, create_splits
+from .tenancy import QOS_CLASSES, TenantScheduler, TenantSpec
 
 __all__ = [
     "AssembledBatch", "BatchAssembler", "Cluster", "TokenRing",
@@ -47,4 +48,5 @@ __all__ = [
     "make_prefetcher", "SAMPLING_MODES", "HotKeyTracker", "ReplicaCache",
     "Replication", "ReplicationConfig", "ZipfPlan", "SplitSpec",
     "check_entity_independence", "create_splits",
+    "QOS_CLASSES", "TenantScheduler", "TenantSpec",
 ]

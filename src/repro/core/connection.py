@@ -133,10 +133,17 @@ class ConnectionPool:
         measured budget?  Advisory — the prefetcher defers, never drops, and
         force-issues when nothing is admissible.  Always true without a
         controller (static mode has no per-route budget to consult); the
-        federated pool overrides this with the *serving member's* budget."""
+        federated pool overrides this with the *serving member's* budget.
+        When the controller sits behind a tenant scheduler
+        (``core/tenancy.py``), the tenant's aggregate share is consulted
+        too — an over-share tenant defers even if this one route still has
+        budget (the base ``SharedIngressLimiter`` admits everything)."""
         if self.controller is None:
             return True
-        return self.inflight < self.controller.budget()
+        if self.inflight >= self.controller.budget():
+            return False
+        limiter = self.controller.limiter
+        return limiter.admit(self.controller) if limiter is not None else True
 
     # -- routing ---------------------------------------------------------
     def _pick_connection(self, key: _uuid.UUID,

@@ -136,27 +136,108 @@ class SharedIngressLimiter:
     """Fair-share cap for controllers whose consumers share one client NIC.
 
     Each registered controller's budget is additionally capped at
-    ``gain x (bandwidth / n_members) x min_rtt`` worth of samples — its
+    ``gain x (bandwidth / n_active) x min_rtt`` worth of samples — its
     fair-share bandwidth-delay product — so N hosts on one ingress converge
     to ~1/N shares instead of the deepest-buffered host starving the rest.
+
+    The divisor counts *active* members only: a member with no completion
+    inside ``activity_window`` (a drained host, a consumer blocked on
+    compute) has no demand right now, so its slice is redistributed to the
+    members still loading instead of stranded.  The asking controller always
+    counts itself — a drained host coming back asks for budget before it has
+    fresh completions — and members that have never completed anything count
+    as active too (they are about to ramp).
+
+    Every completion is also recorded per member (a bounded latency ring
+    plus byte/count totals): the raw material for per-host and per-tenant
+    request-latency reporting.  :class:`repro.core.tenancy.TenantScheduler`
+    subclasses this into weighted-fair per-tenant QoS shares with admission
+    control; the ``admit`` hook here is its seam (the base limiter admits
+    everything — the per-route budget is the only brake).
     """
 
-    def __init__(self, bandwidth: float) -> None:
+    _LATENCY_RING = 8192        # recent completions kept per member
+
+    def __init__(self, bandwidth: float, clock=None,
+                 activity_window: float = 1.0) -> None:
         if bandwidth <= 0.0:
             raise ValueError(f"bandwidth must be positive, got {bandwidth}")
+        if activity_window <= 0.0:
+            raise ValueError(f"activity_window must be positive, "
+                             f"got {activity_window}")
         self.bandwidth = bandwidth
+        self.activity_window = activity_window
+        self._clock = clock
         self._members: List["FlowController"] = []
+        self._last_seen: Dict["FlowController", float] = {}
+        self._latency: Dict["FlowController", Deque[float]] = {}
+        self._member_bytes: Dict["FlowController", int] = {}
+        self._member_completions: Dict["FlowController", int] = {}
 
     def register(self, ctl: "FlowController") -> None:
         if ctl not in self._members:
             self._members.append(ctl)
+            self._latency[ctl] = deque(maxlen=self._LATENCY_RING)
+            self._member_bytes[ctl] = 0
+            self._member_completions[ctl] = 0
+
+    def on_complete(self, ctl: "FlowController", rtt: float, now: float,
+                    nbytes: int) -> None:
+        """Per-completion bookkeeping (fed by ``FlowController.on_complete``):
+        the activity timestamp that drives the work-conserving split, plus
+        the latency ring and byte totals behind the reports.  Pure
+        accounting — budgets only move through ``fair_cap_samples``."""
+        if ctl not in self._latency:
+            self.register(ctl)
+        self._last_seen[ctl] = now
+        self._latency[ctl].append(rtt)
+        self._member_bytes[ctl] += nbytes
+        self._member_completions[ctl] += 1
+
+    def _now(self) -> float:
+        if self._clock is not None:
+            return self._clock.now()
+        return max(self._last_seen.values(), default=0.0)
+
+    def active_members(self, now: Optional[float] = None,
+                       include: Optional["FlowController"] = None,
+                       ) -> List["FlowController"]:
+        """Members with demand: a completion inside ``activity_window`` ago,
+        or no samples yet (still ramping).  ``include`` forces the asking
+        controller in — a drained member asking for budget is waking up."""
+        if now is None:
+            now = self._now()
+        out = [c for c in self._members
+               if c not in self._last_seen
+               or now - self._last_seen[c] <= self.activity_window]
+        if include is not None and include not in out:
+            out.append(include)
+        return out
+
+    def latencies(self, ctl: "FlowController") -> List[float]:
+        """Recent per-fetch RTTs of one member (bounded ring, oldest first)."""
+        return list(self._latency.get(ctl, ()))
+
+    def member_bytes(self, ctl: "FlowController") -> int:
+        return self._member_bytes.get(ctl, 0)
+
+    def admit(self, ctl: "FlowController") -> bool:
+        """Tenant-level admission seam (consulted by ``ConnectionPool.admit``
+        on the route-admission path).  No tenants here, so always yes."""
+        return True
+
+    def note_issue(self) -> None:
+        """A member pool issued a fetch, so in-flight load moved.  The base
+        limiter's split never reads in-flight state; the tenant scheduler
+        invalidates its admission memo here."""
 
     def fair_cap_samples(self, ctl: "FlowController") -> float:
         min_rtt = ctl.min_rtt()
         avg = ctl.avg_sample_bytes()
         if min_rtt is None or avg is None:
             return math.inf
-        share = self.bandwidth / max(len(self._members), 1)
+        active = self.active_members(include=ctl)
+        share = self.bandwidth / max(len(active), 1)
         return ctl.cfg.gain * (share / avg) * min_rtt
 
 
@@ -205,6 +286,12 @@ class FlowController:
         # signal ownership rebalancing shifts keyspace weight toward
         # (see FederatedRing.rebalance in core/federation.py).
         self._inflight_ema: Optional[float] = None
+        # delivery-rate memo: the estimate is a pure function of the rate
+        # buckets and the clock, but the admission path queries it once per
+        # would-be fetch — thousands of times per event under a deferral
+        # storm — so recomputing the windowed series each call dominates
+        # whole-run wall time without this
+        self._rate_cache: Optional[tuple] = None
         self._cooldown_until = -math.inf
         self._next_probe_rtt = cfg.probe_rtt_interval
         self._drain_until = -math.inf
@@ -223,6 +310,8 @@ class FlowController:
         """One fetch finished: an RTT sample plus a delivery event."""
         rtt = max(t_done - t_issued, 1e-9)
         self.completions += 1
+        if self._limiter is not None:
+            self._limiter.on_complete(self, rtt, t_done, nbytes)
         if self._rtt_anchor is None or rtt < self._rtt_anchor:
             self._rtt_anchor = rtt
         # min-RTT filter (bucketed so the deque stays bounded on fast routes)
@@ -344,6 +433,7 @@ class FlowController:
         self._rtt_anchor = min(m for _, m in self._rtt_mins)
         self._min_rtt_hint = None
         self._rate_hint = None
+        self._rate_cache = None
         self._slow_start = True
         # The filter just re-anchored to the new regime (and the budget sat
         # near the floor through the detection window, so the surviving
@@ -358,6 +448,19 @@ class FlowController:
         self._inflight_ema = (float(inflight) if self._inflight_ema is None
                               else 0.95 * self._inflight_ema
                               + 0.05 * inflight)
+        if self._limiter is not None:
+            self._limiter.note_issue()
+
+    @property
+    def limiter(self) -> Optional[SharedIngressLimiter]:
+        """The shared-ingress limiter / tenant scheduler this controller is
+        registered with (``None`` when the consumer owns its NIC)."""
+        return self._limiter
+
+    def inflight_samples(self) -> float:
+        """Measured in-flight load (EMA of the pool's at-issue samples) —
+        what tenant-level admission compares against the share's BDP."""
+        return self._inflight_ema or 0.0
 
     def on_failure(self) -> None:
         """A connection failed over — treat like a loss event."""
@@ -392,12 +495,21 @@ class FlowController:
 
     def delivery_rate(self) -> Optional[float]:
         """Max windowed delivery rate (samples/s) over complete buckets."""
+        last = self._rate_events[-1] if self._rate_events else None
+        key = (self._clock.now(), len(self._rate_events),
+               last[0] if last else None, last[1] if last else None)
+        if self._rate_cache is not None and self._rate_cache[0] == key:
+            return self._rate_cache[1]
         done = [(t, n) for t, n in self._rate_events
                 if t + self.cfg.rate_window <= self._clock.now()]
         if not done:
-            return self._rate_hint
-        series = windowed_series(done, self.cfg.rate_window, start=done[0][0])
-        return max(rate for _, rate in series)
+            rate = self._rate_hint
+        else:
+            series = windowed_series(done, self.cfg.rate_window,
+                                     start=done[0][0])
+            rate = max(r for _, r in series)
+        self._rate_cache = (key, rate)
+        return rate
 
     def bdp_samples(self) -> Optional[float]:
         rate, min_rtt = self.delivery_rate(), self.min_rtt()
@@ -513,6 +625,7 @@ class FlowController:
                                   self._floor), self._ceiling)
         self._min_rtt_hint = state.get("min_rtt")
         self._rate_hint = state.get("rate")
+        self._rate_cache = None
         if state.get("avg_bytes"):
             self._avg_bytes = float(state["avg_bytes"])
         # re-seeded, not fresh: the hints govern until real samples land, and

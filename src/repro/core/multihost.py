@@ -63,6 +63,19 @@ ownership toward members whose flow controllers measure spare
 bandwidth-delay product.  Replica cache and rebalanced ownership map ride
 ``checkpoint()`` and restore across elastic N->M unchanged.
 
+Multi-tenant QoS (``MultiHostConfig.tenants``, ``core/tenancy.py``): hosts
+are tagged with tenants (round-robin, or an explicit ``tenant_of_host``
+map) and the shared client ingress is scheduled by a weighted-fair
+``TenantScheduler`` instead of the equal-split ``SharedIngressLimiter`` —
+rate floors/ceilings, work-conserving redistribution, tenant-level
+admission on the route-admission path, and per-tenant
+egress/hit-rate/stall/latency sections in the run report.  Tenant specs
+may carry their own sampling mode, so one run mixes a uniform
+latency-sensitive tenant with zipf batch tenants; ``host_sampling``
+expresses the same mixed workload without tenancy (the untenanted
+baseline of ``benchmarks/bench_tenancy.py``).  Scheduler state rides
+``checkpoint()`` like flow snapshots do.
+
 Invariants this module maintains (property-tested in
 ``tests/test_resharding.py`` / ``tests/test_multihost.py`` /
 ``tests/test_federation.py``):
@@ -93,8 +106,8 @@ from .cluster import Cluster, TokenRing
 from .federation import (ClusterSpec, FederatedCluster,
                          FederatedConnectionPool, FederatedRing,
                          federated_preferred_subsets)
-from .flowctl import (FlowControlConfig, SharedIngressLimiter,
-                      merge_snapshots)
+from .flowctl import (FlowControlConfig, FlowControllerGroup,
+                      SharedIngressLimiter, merge_snapshots)
 from .kvstore import KVStore
 from .loader import CassandraLoader, LoaderConfig
 from .netsim import DISK_BANDWIDTH, NIC_BANDWIDTH, RateResource, VirtualClock
@@ -103,6 +116,10 @@ from .placement import (FEDERATED_POLICIES, PLACEMENT_POLICIES,
                         split_strips)
 from .prefetcher import EpochPlan, compute_reflow
 from .replication import SAMPLING_MODES, ReplicationConfig, ZipfPlan
+from .stats import summarize
+from .tenancy import TenantScheduler, TenantSpec
+
+import numpy as np
 
 
 @dataclass
@@ -184,6 +201,24 @@ class MultiHostConfig:
     # Per-key route admission in the prefetcher (see PrefetchConfig):
     # requires adaptive flow control to have per-route budgets to consult.
     route_admission: bool = False
+    # Multi-tenant QoS (core/tenancy.py): when set, hosts are tagged with
+    # tenants (``tenant_of_host``, or round-robin over the specs) and the
+    # client NIC is scheduled by a weighted-fair TenantScheduler instead of
+    # the equal-split SharedIngressLimiter.  Requires
+    # flow_control="adaptive" (QoS shares are enforced through the
+    # controllers' budget caps) and — single-cluster — also
+    # shared_client_ingress=True (the NIC the shares divide); under a
+    # federation the scheduler caps per-member budgets against
+    # client_ingress_bandwidth without a shared ingress pipe (each host
+    # keeps its own NIC).  A tenant spec's ``sampling``/``zipf_s`` drive
+    # that tenant's hosts' access pattern.
+    tenants: Optional[Tuple[TenantSpec, ...]] = None
+    tenant_of_host: Optional[Tuple[str, ...]] = None
+    # Per-host sampling override ("uniform"/"zipf" per host), independent of
+    # tenancy — how the untenanted baseline of bench_tenancy expresses the
+    # same mixed workload.  Takes precedence over tenant-spec sampling;
+    # ``sampling="zipf"`` above still forces every host to zipf.
+    host_sampling: Optional[Tuple[str, ...]] = None
 
     def loader_config(self, shard_id: int,
                       preferred_nodes: Optional[tuple] = None) -> LoaderConfig:
@@ -245,6 +280,37 @@ class MultiHostRun:
             raise ValueError("hedge_after='auto' needs "
                              "flow_control='adaptive' (the delay comes from "
                              "the controller's min-RTT)")
+        if cfg.tenant_of_host is not None and not cfg.tenants:
+            raise ValueError("tenant_of_host needs tenants "
+                             "(set MultiHostConfig.tenants)")
+        self.tenant_of_host: Optional[Tuple[str, ...]] = None
+        if cfg.tenants:
+            if cfg.flow_control != "adaptive":
+                raise ValueError("tenants need flow_control='adaptive' (QoS "
+                                 "shares are enforced through the "
+                                 "controllers' budget caps)")
+            assignment = cfg.tenant_of_host or tuple(
+                cfg.tenants[i % len(cfg.tenants)].name
+                for i in range(cfg.n_hosts))
+            if len(assignment) != cfg.n_hosts:
+                raise ValueError(f"tenant_of_host has {len(assignment)} "
+                                 f"entries for {cfg.n_hosts} hosts")
+            known = {t.name for t in cfg.tenants}
+            unknown = sorted(set(assignment) - known)
+            if unknown:
+                raise ValueError(f"tenant_of_host names unknown tenants "
+                                 f"{unknown} (have {sorted(known)})")
+            self.tenant_of_host = tuple(assignment)
+        if cfg.host_sampling is not None:
+            if len(cfg.host_sampling) != cfg.n_hosts:
+                raise ValueError(f"host_sampling has "
+                                 f"{len(cfg.host_sampling)} entries for "
+                                 f"{cfg.n_hosts} hosts")
+            bad = sorted(set(cfg.host_sampling) - set(SAMPLING_MODES))
+            if bad:
+                raise ValueError(f"unknown sampling modes {bad} in "
+                                 f"host_sampling (choose from "
+                                 f"{SAMPLING_MODES})")
         self.cfg = cfg
         self.clock = clock or VirtualClock()
         if cluster is not None:
@@ -278,39 +344,82 @@ class MultiHostRun:
                 self.cluster.node_names(), cfg.n_hosts)
         prefs = (self.preferred if cfg.placement in RING_POLICIES
                  else [None] * cfg.n_hosts)
+        # Per-host access pattern: the global sampling mode forces every
+        # host to zipf; else an explicit host_sampling map; else the hosts'
+        # tenant specs; else uniform everywhere (the default).
         if cfg.sampling == "zipf":
-            # skewed workload: every host samples the same global rank->key
-            # map with replacement; placement strips don't apply (there is
-            # no exactly-once delivery set), preferred-node routing does.
-            plans = [ZipfPlan(uuids, cfg.seed, i, cfg.n_hosts, s=cfg.zipf_s,
-                              shift_every=cfg.zipf_shift_every)
-                     for i in range(cfg.n_hosts)]
-        elif cfg.placement in RING_POLICIES:
+            self._host_sampling = ["zipf"] * cfg.n_hosts
+            self._host_zipf_s: List[Optional[float]] = \
+                [cfg.zipf_s] * cfg.n_hosts
+        elif cfg.host_sampling is not None:
+            self._host_sampling = list(cfg.host_sampling)
+            self._host_zipf_s = [cfg.zipf_s if s == "zipf" else None
+                                 for s in self._host_sampling]
+        elif self.tenant_of_host is not None:
+            by_host = [{t.name: t for t in cfg.tenants}[name]
+                       for name in self.tenant_of_host]
+            self._host_sampling = [t.sampling for t in by_host]
+            self._host_zipf_s = [t.zipf_s if t.sampling == "zipf" else None
+                                 for t in by_host]
+        else:
+            self._host_sampling = ["uniform"] * cfg.n_hosts
+            self._host_zipf_s = [None] * cfg.n_hosts
+        # zipf hosts sample the global rank->key map with replacement
+        # (placement strips don't apply — there is no exactly-once delivery
+        # set — preferred-node routing does); uniform hosts keep their
+        # strip-of-shuffle plans even in a mixed run, so *their* epochs stay
+        # exactly-once over their strips.
+        strips = None
+        if (cfg.placement in RING_POLICIES
+                and "uniform" in self._host_sampling):
             strips = _steady_strips(uuids, cfg.seed, cfg.n_hosts,
                                     cfg.placement, ring=self.cluster.ring,
                                     rf=self.cluster.rf,
                                     preferred=self.preferred)
-            plans = [EpochPlan.from_samples(strips[i], cfg.seed, i,
-                                            cfg.n_hosts)
-                     for i in range(cfg.n_hosts)]
-        else:       # contiguous: loader carves its own strip (PR1 semantics)
-            plans = [None] * cfg.n_hosts
+        plans: List[object] = []
+        for i in range(cfg.n_hosts):
+            if self._host_sampling[i] == "zipf":
+                plans.append(ZipfPlan(uuids, cfg.seed, i, cfg.n_hosts,
+                                      s=self._host_zipf_s[i],
+                                      shift_every=cfg.zipf_shift_every))
+            elif strips is not None:
+                plans.append(EpochPlan.from_samples(strips[i], cfg.seed, i,
+                                                    cfg.n_hosts))
+            else:   # contiguous: loader carves its own strip (PR1 semantics)
+                plans.append(None)
         if cfg.shared_client_ingress and self.federation is not None:
             raise ValueError("shared_client_ingress is not supported with a "
                              "federation (each host already multiplexes its "
                              "member sub-pools over one NIC)")
+        if cfg.tenants and self.federation is None \
+                and not cfg.shared_client_ingress:
+            raise ValueError("tenants need shared_client_ingress=True (the "
+                             "NIC whose bandwidth the QoS shares divide) — "
+                             "or a federation, where the scheduler caps "
+                             "per-member budgets against "
+                             "client_ingress_bandwidth instead")
         # Co-located consumers: one client NIC for every host, plus — under
         # adaptive flow control — a fairness cap so the hosts' budgets
         # converge to ~1/N shares of that NIC instead of out-buffering each
-        # other.
+        # other.  With tenants the cap generalizes to weighted-fair QoS
+        # shares (core/tenancy.py); under a federation the scheduler runs
+        # caps-only (no shared ingress pipe — each host has its own NIC).
         shared_ingress = None
-        self.limiter = None
+        self.limiter: Optional[SharedIngressLimiter] = None
         if cfg.shared_client_ingress:
             shared_ingress = RateResource("client/shared-ingress",
                                           cfg.client_ingress_bandwidth)
             if cfg.flow_control == "adaptive":
-                self.limiter = SharedIngressLimiter(
-                    cfg.client_ingress_bandwidth)
+                if cfg.tenants:
+                    self.limiter = TenantScheduler(
+                        cfg.client_ingress_bandwidth, cfg.tenants,
+                        clock=self.clock)
+                else:
+                    self.limiter = SharedIngressLimiter(
+                        cfg.client_ingress_bandwidth, clock=self.clock)
+        elif cfg.tenants:
+            self.limiter = TenantScheduler(cfg.client_ingress_bandwidth,
+                                           cfg.tenants, clock=self.clock)
         self.loaders = []
         for i in range(cfg.n_hosts):
             pool = None
@@ -331,6 +440,24 @@ class MultiHostRun:
                                 plan=plans[i], pool=pool,
                                 ingress=shared_ingress,
                                 flow_limiter=self.limiter))
+        # Tag every host's controller(s) with its tenant — under a
+        # federation that is each member controller of the host's group, so
+        # the scheduler sees per-route demand and the summed group budget
+        # respects the tenant's cap.
+        if self.tenant_of_host is not None:
+            for ld, tenant in zip(self.loaders, self.tenant_of_host):
+                ctl = ld.flow_controller
+                members = (ctl.members.values()
+                           if isinstance(ctl, FlowControllerGroup)
+                           else [ctl])
+                for m in members:
+                    self.limiter.assign(m, tenant)
+        # Per-host consumption accounting (cheap bookkeeping, no clock
+        # events): buffer hits vs stalls behind ``next_batch``, the inputs
+        # of the per-tenant hit_frac/stall_frac report sections.
+        self._host_pulls = [0] * cfg.n_hosts
+        self._host_hits = [0] * cfg.n_hosts
+        self._host_stall_s = [0.0] * cfg.n_hosts
         self.rounds_consumed = 0
         self._started = False
 
@@ -359,8 +486,10 @@ class MultiHostRun:
             raise ValueError(f"checkpoint was taken over {ck_size} samples, "
                              f"this run has {len(self._uuids)} — not the "
                              "same dataset")
-        if (self.cfg.sampling == "zipf"
-                or checkpoint.get("sampling", "uniform") == "zipf"):
+        ck_hs = checkpoint.get("host_sampling")
+        ck_zipf = (checkpoint.get("sampling", "uniform") == "zipf"
+                   or (ck_hs is not None and "zipf" in ck_hs))
+        if ck_zipf or "zipf" in self._host_sampling:
             self._start_zipf(checkpoint)
         elif (len(checkpoint["shards"]) == len(self.loaders)
                 and self._same_strips(checkpoint)):
@@ -373,25 +502,40 @@ class MultiHostRun:
         else:
             self._start_resharded(checkpoint)
         self._restore_runtime_placement(checkpoint)
+        # per-tenant cumulative counters re-seed (specs themselves come from
+        # this run's config — a restore never resurrects dropped tenants)
+        if self.tenant_of_host is not None:
+            self.limiter.restore(checkpoint.get("tenants"))
         self._started = True
         return self
 
     def _start_zipf(self, checkpoint: Dict) -> None:
-        """Restore involving Zipf sampling: with-replacement draws have no
-        exactly-once delivery set to reflow, so a matching checkpoint
-        resumes each shard's sample stream exactly and any mismatch (host
-        count, seed, exponent, sampling mode) restarts at the slowest
-        shard's epoch boundary with the merged flow-control budget."""
+        """Restore involving Zipf sampling (pure or mixed per host):
+        with-replacement draws have no exactly-once delivery set to reflow,
+        so a matching checkpoint resumes each shard's sample stream exactly
+        and any mismatch (host count, seed, exponent, per-host sampling
+        map) restarts at the slowest shard's epoch boundary with the merged
+        flow-control budget.  In a *mixed* run that boundary restart also
+        applies to the uniform hosts — their interrupted epoch replays
+        (at-least-once) because the zipf hosts leave nothing to reflow
+        against; matching restores stay exact/exactly-once."""
         shards = checkpoint["shards"]
-        exact = (checkpoint.get("sampling", "uniform") == self.cfg.sampling
-                 == "zipf"
-                 and len(shards) == len(self.loaders)
+        # Per-host sampling metadata, defaulted for checkpoints predating
+        # mixed workloads (pure-zipf runs recorded only the global keys).
+        ck_hs = checkpoint.get("host_sampling") or \
+            [checkpoint.get("sampling", "uniform")] * len(shards)
+        ck_zs = checkpoint.get("host_zipf_s") or \
+            [checkpoint.get("zipf_s", self.cfg.zipf_s) if s == "zipf"
+             else None for s in ck_hs]
+        exact = (len(shards) == len(self.loaders)
+                 and list(ck_hs) == list(self._host_sampling)
+                 and list(ck_zs) == list(self._host_zipf_s)
                  and checkpoint.get("seed", self.cfg.seed) == self.cfg.seed
-                 and checkpoint.get("zipf_s",
-                                    self.cfg.zipf_s) == self.cfg.zipf_s
                  and checkpoint.get("zipf_shift_every",
                                     self.cfg.zipf_shift_every)
-                 == self.cfg.zipf_shift_every)
+                 == self.cfg.zipf_shift_every
+                 and (("uniform" not in ck_hs)
+                      or self._same_strips(checkpoint)))
         if exact:
             for ld, s in zip(self.loaders, shards):
                 ld.start(s["epoch"], s["cursor"])
@@ -558,6 +702,9 @@ class MultiHostRun:
             "failovers": sum(ld.pool.failovers for ld in self.loaders),
             "requests_sent": sum(ld.pool.requests_sent
                                  for ld in self.loaders),
+            "host_pulls": list(self._host_pulls),
+            "host_hits": list(self._host_hits),
+            "host_stall_s": list(self._host_stall_s),
         }
         if self.federation is not None:
             counters0["cluster_failovers"] = sum(ld.pool.cluster_failovers
@@ -571,7 +718,13 @@ class MultiHostRun:
                                                    for ld in self.loaders)
         for _ in range(n_rounds):
             for host_id, ld in enumerate(self.loaders):
+                t_pull = self.clock.now()
+                hit = ld.ready_batches > 0
                 batch = ld.next_batch(timeout=timeout)
+                self._host_stall_s[host_id] += self.clock.now() - t_pull
+                self._host_pulls[host_id] += 1
+                if hit:
+                    self._host_hits[host_id] += 1
                 if on_batch is not None:
                     on_batch(host_id, batch)
             self.rounds_consumed += 1
@@ -643,6 +796,38 @@ class MultiHostRun:
             # a federation): budget, BDP estimate, min-RTT, backoff counts
             report["flow"] = [ld.flow_controller.report()
                               for ld in self.loaders]
+        if self.limiter is not None:
+            # per-host request-latency summaries from the limiter's
+            # completion rings (recent fetches, bounded per member)
+            report["request_latency_s"] = [
+                summarize(np.asarray(self._host_request_latencies(ld),
+                                     dtype=float))
+                for ld in self.loaders]
+        if self.tenant_of_host is not None:
+            # per-tenant QoS view over this window: the scheduler's own
+            # section (share, cumulative egress, latency summary, admission
+            # counters) plus windowed consumption stats from the driver
+            sched = self.limiter.report()
+            tenants: Dict[str, Dict] = {}
+            for name in self.limiter.tenants:
+                hosts = [i for i, t in enumerate(self.tenant_of_host)
+                         if t == name]
+                t_bytes = sum(per_client_bytes[i] for i in hosts)
+                pulls = sum(self._host_pulls[i]
+                            - counters0["host_pulls"][i] for i in hosts)
+                hits = sum(self._host_hits[i]
+                           - counters0["host_hits"][i] for i in hosts)
+                stall = sum(self._host_stall_s[i]
+                            - counters0["host_stall_s"][i] for i in hosts)
+                entry = dict(sched[name])
+                entry.update({
+                    "hosts": hosts,
+                    "egress_Bps": t_bytes / elapsed,
+                    "hit_frac": hits / max(pulls, 1),
+                    "stall_frac": stall / (elapsed * max(len(hosts), 1)),
+                })
+                tenants[name] = entry
+            report["tenants"] = tenants
         if self.federation is not None:
             # break the window's egress out per member cluster; the WAN-bytes
             # share is the fraction served over WAN routes (federation
@@ -680,6 +865,19 @@ class MultiHostRun:
                 self.federation.routing_ring.weights
             report["rebalances"] = self.rebalances
         return report
+
+    def _host_request_latencies(self, ld) -> List[float]:
+        """One host's recent per-fetch RTTs, pulled from the limiter's
+        completion rings (all member controllers under a federation)."""
+        ctl = ld.flow_controller
+        if ctl is None or self.limiter is None:
+            return []
+        members = (ctl.members.values()
+                   if isinstance(ctl, FlowControllerGroup) else [ctl])
+        out: List[float] = []
+        for m in members:
+            out.extend(self.limiter.latencies(m))
+        return out
 
     # -- bandwidth-aware ownership rebalancing -------------------------------
     def rebalance(self, step: float = 0.25) -> Dict[str, int]:
@@ -745,6 +943,16 @@ class MultiHostRun:
             ck["zipf_s"] = self.cfg.zipf_s
             if self.cfg.zipf_shift_every is not None:
                 ck["zipf_shift_every"] = self.cfg.zipf_shift_every
+        if "zipf" in self._host_sampling and self.cfg.sampling != "zipf":
+            # mixed workload: the per-host sampling map (and per-host zipf
+            # exponents) decide restore exactness, see _start_zipf
+            ck["host_sampling"] = list(self._host_sampling)
+            ck["host_zipf_s"] = list(self._host_zipf_s)
+            if self.cfg.zipf_shift_every is not None:
+                ck["zipf_shift_every"] = self.cfg.zipf_shift_every
+        if self.tenant_of_host is not None:
+            ck["tenant_of_host"] = list(self.tenant_of_host)
+            ck["tenants"] = self.limiter.snapshot()
         if self.federation is not None:
             ck["federation"] = self.federation.ring.metadata()
             # runtime placement state rides along: the rebalanced ownership
@@ -761,6 +969,11 @@ class MultiHostRun:
         return [len(ld.plan) for ld in self.loaders]
 
     def describe(self) -> str:
+        tenants = ""
+        if self.cfg.tenants:
+            tenants = " [tenants: " + ", ".join(
+                f"{t.name}({t.qos}, w={t.weight:g})"
+                for t in self.cfg.tenants) + "]"
         if self.federation is not None:
             members = ", ".join(
                 f"{s.name}({s.n_nodes}x{s.backend}, rf={s.replication_factor},"
@@ -768,11 +981,11 @@ class MultiHostRun:
                 " route)" for s in self.federation.specs)
             return (f"{self.cfg.n_hosts} hosts x B={self.cfg.batch_size} "
                     f"-> federation [{members}] "
-                    f"({self.cfg.placement} placement)")
+                    f"({self.cfg.placement} placement){tenants}")
         return (f"{self.cfg.n_hosts} hosts x B={self.cfg.batch_size} "
                 f"-> {self.cfg.n_nodes}-node {self.cfg.backend} "
                 f"(rf={self.cfg.replication_factor}, {self.cfg.route} route, "
-                f"{self.cfg.placement} placement)")
+                f"{self.cfg.placement} placement){tenants}")
 
 
 def _steady_strips(uuids: List[_uuid.UUID], seed: int, n_hosts: int,

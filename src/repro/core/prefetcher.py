@@ -440,25 +440,38 @@ class OutOfOrderPrefetcher(_PrefetcherBase):
             self._samples_inflight += 1
             self.pool.fetch(u, self._on_sample)
 
+        # Admission verdicts only move with the clock, a completion, or an
+        # issue (in-flight counts/EMAs) — none of which happen while keys
+        # are merely rotated through the deferral window.  So once a full
+        # scan of the window admits nothing, re-scanning it is pure waste
+        # until the next issue: skip it (``window_dry``), and let each
+        # issue re-arm the scan.  Behavior is unchanged — only the
+        # redundant re-checks (quadratic in window size per fill under a
+        # deferral storm) are elided.
+        window_dry = False
         while (self._samples_inflight + len(self._pool_arrived)
                + self._assembling * B + len(self._ready) * B) < budget:
             issued = False
-            for _ in range(len(self._deferred)):
-                ep, u = self._deferred.popleft()
-                if self.pool.admit(u):
-                    issue(ep, u)
-                    issued = True
-                    break
-                self._deferred.append((ep, u))
+            if not window_dry:
+                for _ in range(len(self._deferred)):
+                    ep, u = self._deferred.popleft()
+                    if self.pool.admit(u):
+                        issue(ep, u)
+                        issued = True
+                        break
+                    self._deferred.append((ep, u))
+                window_dry = not issued and bool(self._deferred)
             if issued:
                 continue
             if len(self._deferred) >= B:
                 self.forced_issues += 1
                 issue(*self._deferred.popleft())
+                window_dry = False
                 continue
             ep, u = next(self._stream)
             if self.pool.admit(u):
                 issue(ep, u)
+                window_dry = False
             else:
                 self.deferrals += 1
                 self._deferred.append((ep, u))

@@ -415,6 +415,40 @@ def test_shared_ingress_fairness_cap(store_uuids):
         assert b <= max(cap, floor) + 1
 
 
+def test_shared_ingress_drained_host_share_redistributed(store_uuids):
+    """Work conservation on the shared NIC: when one host stops pulling
+    (drained / blocked on compute), it drops out of the active set after
+    ``activity_window`` and the remaining host's fair cap grows to the full
+    NIC instead of half — the equal-split blind spot this fixes."""
+    store, uuids = store_uuids
+    cfg = _mh_cfg(2, shared_client_ingress=True,
+                  client_ingress_bandwidth=1e9)
+    run = MultiHostRun(store, uuids[:20_000], cfg).start()
+    run.run(8)                                   # both hosts loading
+    lim = run.limiter
+    ctl0 = run.loaders[0].flow_controller
+    assert len(lim.active_members()) == 2
+    contended_cap = lim.fair_cap_samples(ctl0)
+
+    # host 1 goes idle: wait out the activity window, then only host 0 pulls
+    run.clock.sleep(1.5 * lim.activity_window)
+    t0, b0 = run.clock.now(), run.loaders[0].pool.bytes_received
+    for _ in range(12):
+        run.loaders[0].next_batch()
+    solo_rate = ((run.loaders[0].pool.bytes_received - b0)
+                 / (run.clock.now() - t0))
+    assert lim.active_members() == [ctl0]        # host 1 aged out
+    # full-NIC cap, exactly the single-member formula
+    cap = lim.fair_cap_samples(ctl0)
+    assert cap == pytest.approx(
+        ctl0.cfg.gain * (lim.bandwidth / ctl0.avg_sample_bytes())
+        * ctl0.min_rtt())
+    assert cap > 1.6 * contended_cap
+    # ...and the surviving host actually uses the freed share: its solo
+    # rate clearly beats its half-NIC contended share
+    assert solo_rate > 0.7 * lim.bandwidth
+
+
 def test_shared_ingress_rejected_with_federation(store_uuids):
     from repro.core import ClusterSpec
     store, uuids = store_uuids

@@ -89,6 +89,21 @@ SPECS = {
             "cells.high.adaptive.goodput_sps",
         ],
     },
+    "tenancy.json": {
+        # the isolation bounds (serve p99 vs solo, aggregate vs untenanted)
+        # are boolean `checks` asserted by the bench itself; the baselines
+        # guard the scenario operating points they are computed from
+        "context": ["quick", "rounds", "n_samples", "batch_size",
+                    "zipf_s", "seed"],
+        "metrics": [
+            "solo.p99_ms",
+            "untenanted.p99_ms",
+            "tenanted.p99_ms",
+            "untenanted.aggregate_MBps",
+            "tenanted.aggregate_MBps",
+            "tenanted.serve_MBps",
+        ],
+    },
     "scenarios.json": {
         "context": ["quick", "n_samples", "static_sweep", "oracle_slack"],
         "metrics": [
