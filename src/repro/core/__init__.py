@@ -1,6 +1,7 @@
 """repro.core — the paper's contribution: network data loading with
 out-of-order, incremental prefetching over NoSQL storage."""
 
+from .arena import ArenaSlab, PinnedArena
 from .batch_loader import AssembledBatch, BatchAssembler
 from .cluster import Cluster, TokenRing
 from .connection import ConnectionPool, FetchResult
@@ -27,8 +28,13 @@ from .scenarios import (MODES, QUICK_MATRIX, SCENARIOS,
                         OracleDepthController, Scenario, matrix, run_cell)
 from .splits import SplitSpec, check_entity_independence, create_splits
 from .tenancy import QOS_CLASSES, TenantScheduler, TenantSpec
+from .wirefmt import (WIRE_CODECS, ByteShuffleCodec, Int8QuantCodec,
+                      NoneCodec, WireCodec, get_codec)
 
 __all__ = [
+    "ArenaSlab", "PinnedArena",
+    "WIRE_CODECS", "WireCodec", "NoneCodec", "ByteShuffleCodec",
+    "Int8QuantCodec", "get_codec",
     "AssembledBatch", "BatchAssembler", "Cluster", "TokenRing",
     "ConnectionPool", "FetchResult", "ClusterSpec", "FederatedCluster",
     "FederatedConnectionPool", "FederatedRing",

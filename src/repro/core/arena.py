@@ -1,0 +1,130 @@
+"""Pinned prefetcher arena: reusable contiguous batch buffers.
+
+The materialize path used to build every batch as per-sample Python
+``bytes`` plus a fresh ``bytearray`` per batch — three host passes (decode
+to bytes, copy into the batch buffer, re-parse into arrays) before the
+device ever saw a byte.  The arena replaces that with a small pool of
+preallocated page-aligned-style numpy slabs (the sim analogue of pinned
+host memory): ``BatchAssembler`` writes each arriving sample straight into
+its slot of a reused ``(batch, slot_bytes)`` uint8 buffer, drops the
+per-sample bytes, and the device feed hands the *whole slab* to a single
+``device_put`` + fused Pallas crop/mirror/normalize call
+(``kernels/crop_norm.py``) — zero per-batch host materialize/transpose
+passes.
+
+Slabs cycle acquire -> write -> (device upload) -> release; the pool grows
+only when the consumer holds more slabs than expected (``slabs_created``
+makes that visible), so steady state allocates nothing per batch.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+
+class ArenaSlab:
+    """One pinned batch buffer: ``(batch_size, slot_bytes)`` uint8."""
+
+    __slots__ = ("buf", "lengths", "_arena")
+
+    def __init__(self, batch_size: int, slot_bytes: int,
+                 arena: "Optional[PinnedArena]" = None) -> None:
+        self.buf = np.zeros((batch_size, slot_bytes), dtype=np.uint8)
+        self.lengths = np.zeros((batch_size,), dtype=np.int64)
+        self._arena = arena
+
+    @property
+    def batch_size(self) -> int:
+        return self.buf.shape[0]
+
+    @property
+    def slot_bytes(self) -> int:
+        return self.buf.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        return self.buf.nbytes
+
+    def write(self, slot: int, payload: Optional[bytes], size: int) -> None:
+        """Copy one sample's payload into its slot (clipped to the slot, the
+        tail zeroed so a reused slab never leaks a previous batch's bytes)."""
+        cap = self.slot_bytes
+        n = 0
+        if payload is not None:
+            n = min(len(payload), size, cap)
+            self.buf[slot, :n] = np.frombuffer(payload, dtype=np.uint8,
+                                               count=n)
+        if n < cap:
+            self.buf[slot, n:] = 0
+        self.lengths[slot] = n
+
+    def view(self, slot: int, size: Optional[int] = None) -> memoryview:
+        """Zero-copy view of one sample's bytes (buffer-protocol compatible:
+        ``np.frombuffer``, ``struct.unpack`` and slicing all accept it)."""
+        n = int(self.lengths[slot]) if size is None else min(size,
+                                                             self.slot_bytes)
+        return memoryview(self.buf[slot, :n])  # type: ignore[arg-type]
+
+    def pixels(self, h: int, w: int, c: int) -> np.ndarray:
+        """Zero-copy ``(B, h, w, c)`` uint8 view over the slab — what the
+        device feed uploads in one shot for the fused Pallas decode."""
+        n = h * w * c
+        if n > self.slot_bytes:
+            raise ValueError(f"slot holds {self.slot_bytes} B, "
+                             f"image needs {n}")
+        return self.buf[:, :n].reshape(self.batch_size, h, w, c)
+
+    def release(self) -> None:
+        if self._arena is not None:
+            self._arena.release(self)
+
+
+class PinnedArena:
+    """Fixed-geometry slab pool; grows on demand, reuses in steady state."""
+
+    def __init__(self, batch_size: int, slot_bytes: int,
+                 initial_slabs: int = 0) -> None:
+        if batch_size < 1 or slot_bytes < 1:
+            raise ValueError(f"bad arena geometry {batch_size}x{slot_bytes}")
+        self.batch_size = batch_size
+        self.slot_bytes = slot_bytes
+        self._free: List[ArenaSlab] = [ArenaSlab(batch_size, slot_bytes, self)
+                                       for _ in range(initial_slabs)]
+        self.slabs_created = initial_slabs
+        self.acquires = 0
+        self.reuses = 0
+        self.outstanding = 0
+        self.high_water = initial_slabs
+
+    def acquire(self) -> ArenaSlab:
+        self.acquires += 1
+        self.outstanding += 1
+        self.high_water = max(self.high_water, self.outstanding
+                              + len(self._free))
+        if self._free:
+            self.reuses += 1
+            return self._free.pop()
+        self.slabs_created += 1
+        return ArenaSlab(self.batch_size, self.slot_bytes, self)
+
+    def release(self, slab: ArenaSlab) -> None:
+        if slab.batch_size != self.batch_size \
+                or slab.slot_bytes != self.slot_bytes:
+            raise ValueError("slab does not belong to this arena")
+        if slab in self._free:
+            return                      # idempotent release
+        self.outstanding = max(0, self.outstanding - 1)
+        self._free.append(slab)
+
+    def stats(self) -> dict:
+        return {"slabs_created": self.slabs_created,
+                "acquires": self.acquires,
+                "reuses": self.reuses,
+                "outstanding": self.outstanding,
+                "high_water": self.high_water,
+                "slab_bytes": self.batch_size * self.slot_bytes}
+
+
+__all__ = ["ArenaSlab", "PinnedArena"]

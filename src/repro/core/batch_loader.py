@@ -16,6 +16,7 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
+from .arena import ArenaSlab, PinnedArena
 from .connection import ConnectionPool, FetchResult
 from .netsim import Clock
 
@@ -24,7 +25,15 @@ HOST_COPY_BANDWIDTH = 20.0e9  # bytes/s, multi-threaded memcpy into the arena
 
 @dataclass
 class AssembledBatch:
-    """One output batch: features+labels, ready for the device feed."""
+    """One output batch: features+labels, ready for the device feed.
+
+    With an arena-backed assembler the payload bytes live in ``slab`` (one
+    reused contiguous buffer; the per-sample ``FetchResult.payload`` refs
+    are dropped at assembly) and ``payloads()`` serves zero-copy views.
+    ``nbytes`` is *decoded* (host/consumer) bytes; ``wire_nbytes`` is what
+    actually crossed the network — they differ under a wire codec, and
+    egress/tenant accounting must use the wire figure.
+    """
 
     seq: int
     samples: List[FetchResult]
@@ -32,17 +41,41 @@ class AssembledBatch:
     t_last_arrival: float
     t_ready: float
     epoch: int = 0
+    slab: Optional[ArenaSlab] = None
 
     @property
     def nbytes(self) -> int:
+        """Decoded payload bytes (what the host/device consume)."""
         return sum(s.size for s in self.samples)
+
+    @property
+    def wire_nbytes(self) -> int:
+        """Encoded bytes billed on the wire (== nbytes without a codec)."""
+        return sum(s.wire_size for s in self.samples)
 
     @property
     def labels(self) -> np.ndarray:
         return np.asarray([s.label for s in self.samples], dtype=np.int32)
 
-    def payloads(self) -> List[Optional[bytes]]:
+    def payloads(self) -> "List[Optional[bytes] | memoryview]":
+        if self.slab is not None:
+            return [self.slab.view(i, s.size)
+                    for i, s in enumerate(self.samples)]
         return [s.payload for s in self.samples]
+
+    def pixels(self, h: int, w: int, c: int) -> np.ndarray:
+        """Zero-copy ``(B, h, w, c)`` uint8 view (arena batches only)."""
+        if self.slab is None:
+            raise ValueError("pixels() needs an arena-backed batch "
+                             "(LoaderConfig.use_arena=True)")
+        return self.slab.pixels(h, w, c)
+
+    def release(self) -> None:
+        """Recycle the arena slab (no-op otherwise).  Call after the batch
+        content has been uploaded/consumed; views from ``payloads()`` /
+        ``pixels()`` must not be read afterwards."""
+        if self.slab is not None:
+            self.slab.release()
 
     @property
     def uuids(self) -> List[_uuid.UUID]:
@@ -53,10 +86,15 @@ class BatchAssembler:
     """Models (or performs) the contiguous-allocation + parallel-copy stage."""
 
     def __init__(self, clock: Clock, copy_bandwidth: float = HOST_COPY_BANDWIDTH,
-                 real_copy: bool = False) -> None:
+                 real_copy: bool = False,
+                 arena: Optional[PinnedArena] = None) -> None:
         self._clock = clock
         self._copy_bw = copy_bandwidth
         self._real_copy = real_copy
+        # Pinned arena (core/arena.py): real copies land in a reused
+        # contiguous slab instead of a fresh bytearray per batch, and the
+        # per-sample payload refs are dropped — the slab is the only copy.
+        self._arena = arena
         self.bytes_assembled = 0
 
     def assemble(self, seq: int, epoch: int, samples: List[FetchResult],
@@ -64,11 +102,18 @@ class BatchAssembler:
         t_arr = max(s.t_done for s in samples)
         nbytes = sum(s.size for s in samples)
         self.bytes_assembled += nbytes
-        if self._real_copy:
-            # Single contiguous arena; copies are cheap at test scale.  Each
-            # sample owns exactly ``size`` arena bytes (payloads are full-size
-            # since DataRow.materialize stopped truncating — clip defensively
-            # so a short payload can never smear into its neighbour's slot).
+        slab = None
+        if self._real_copy and self._arena is not None:
+            slab = self._arena.acquire()
+            for i, s in enumerate(samples):
+                slab.write(i, s.payload, s.size)
+                s.payload = None       # the slab owns the bytes now
+        elif self._real_copy:
+            # Legacy one-shot bytearray; copies are cheap at test scale.
+            # Each sample owns exactly ``size`` bytes (payloads are
+            # full-size since DataRow.materialize stopped truncating — clip
+            # defensively so a short payload can never smear into its
+            # neighbour's slot).
             arena = bytearray(nbytes)
             off = 0
             for s in samples:
@@ -81,7 +126,7 @@ class BatchAssembler:
                                t_first_issue=min(s.t_issued for s in samples),
                                t_last_arrival=t_arr,
                                t_ready=self._clock.now() + delay,
-                               epoch=epoch)
+                               epoch=epoch, slab=slab)
         self._clock.schedule(delay, on_ready, batch)
 
 

@@ -65,7 +65,7 @@ class Cluster:
                  n_nodes: int = 1, rf: int = 1, seed: int = 1234,
                  disk_bandwidth: float = DISK_BANDWIDTH,
                  egress_bandwidth: float = NIC_BANDWIDTH,
-                 node_prefix: str = "") -> None:
+                 node_prefix: str = "", cpu_cores: int = 0) -> None:
         if isinstance(backend, str):
             backend_model = BACKENDS[backend]
         else:
@@ -83,7 +83,8 @@ class Cluster:
             name: SimServerNode(name, backend_model,
                                 np.random.default_rng(seed + 17 * i),
                                 disk_bandwidth=disk_bandwidth,
-                                egress_bandwidth=egress_bandwidth)
+                                egress_bandwidth=egress_bandwidth,
+                                cpu_cores=cpu_cores)
             for i, name in enumerate(names)
         }
         self.ring = TokenRing(names, seed=seed)
@@ -134,6 +135,10 @@ class Cluster:
                 "disk_bytes": node.disk_bytes,
                 "egress_busy_frac": (node.egress.fifo.busy_seconds
                                      / max(now, 1e-9)),
+                # Single-core seconds spent encoding wire-codec frames
+                # (zero without a codec) — the CPU the node trades for
+                # wire bandwidth.
+                "encode_cpu_s": node.encode_cpu_seconds,
                 "down": float(node.down),
             }
         return report

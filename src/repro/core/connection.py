@@ -27,7 +27,9 @@ from .cluster import Cluster
 from .flowctl import (FlowControlConfig, FlowController,
                       SharedIngressLimiter)
 from .kvstore import DataRow
-from .netsim import Clock, RateResource, RouteProfile, SimConnection, TIERS, NIC_BANDWIDTH
+from .netsim import (Clock, FifoResource, RateResource, RouteProfile,
+                     SimConnection, TIERS, NIC_BANDWIDTH)
+from .wirefmt import HOST_CODEC_CORES, WireCodec, get_codec
 
 
 @dataclass
@@ -44,6 +46,13 @@ class FetchResult:
     # replica-hit accounting attributes a completion to, so a fetch routed
     # to a replica but diverted mid-flight is not reported as a saving
     node: Optional[str] = None
+    # bytes this fetch put on the wire (== size unless a codec compressed
+    # it) — what egress/ingress accounting and per-tenant billing must use
+    wire_size: int = 0
+
+    def __post_init__(self) -> None:
+        if self.wire_size == 0:
+            self.wire_size = self.size
 
 
 class ConnectionPool:
@@ -56,7 +65,9 @@ class ConnectionPool:
                  client_ingress_bandwidth: float = NIC_BANDWIDTH,
                  preferred_nodes: Optional[Iterable[str]] = None,
                  ingress: Optional[RateResource] = None,
-                 on_exhausted: Optional[Callable] = None) -> None:
+                 on_exhausted: Optional[Callable] = None,
+                 codec: "str | WireCodec | None" = None,
+                 io_scaling: bool = False) -> None:
         if isinstance(route, str):
             route = TIERS[route]
         if isinstance(hedge_after, str) and hedge_after != "auto":
@@ -93,8 +104,26 @@ class ConnectionPool:
                                  np.random.default_rng(seed + 1009 * cid), self.ingress)
             self.connections.append(conn)
             self._conns_by_node[node.name].append(conn)
+        # Wire codec (core/wirefmt.py): rows travel encoded — the node pays
+        # encode CPU, every wire stage carries the encoded byte count, and
+        # the client pays decode CPU (the FIFO below models the io-threads'
+        # decode workers: full single-core latency per fetch, 1/cores of
+        # serialized time).  ``none`` keeps every code path bit-identical.
+        self.codec = get_codec(codec)
+        self._codec_active = self.codec.name != "none"
+        self._decode_cpu = FifoResource("client/decode")
+        # Controller-driven io-scaling (carried-over ROADMAP item): when on,
+        # routing concentrates on the first ceil(budget/32/n_nodes)
+        # connections per node, so a shallow budget runs few warm streams
+        # instead of spraying over all io_threads x 2 cold ones.
+        self.io_scaling = io_scaling
+        self._conn_rank: Dict[SimConnection, int] = {
+            c: i for conns in self._conns_by_node.values()
+            for i, c in enumerate(conns)}
         self.requests_sent = 0
-        self.bytes_received = 0
+        self.bytes_received = 0            # wire bytes (encoded)
+        self.payload_bytes_received = 0    # decoded payload bytes
+        self.decode_cpu_seconds = 0.0      # host decode core-seconds
         self.failovers = 0
         self.served_by_node: Dict[str, int] = {}
         # Adaptive flow control (core/flowctl.py): when attached, every
@@ -146,6 +175,15 @@ class ConnectionPool:
         return limiter.admit(self.controller) if limiter is not None else True
 
     # -- routing ---------------------------------------------------------
+    def active_conns_per_node(self) -> Optional[int]:
+        """Connections per node the io-scaler keeps in rotation right now
+        (``None`` = no narrowing: io_scaling off or no controller yet)."""
+        if not self.io_scaling or self.controller is None:
+            return None
+        total = self.controller.io_parallelism(len(self.connections))
+        n_nodes = max(len(self._conns_by_node), 1)
+        return max(1, -(-total // n_nodes))
+
     def _pick_connection(self, key: _uuid.UUID,
                          exclude: Iterable[SimConnection] = (),
                          rf: Optional[int] = None) -> SimConnection:
@@ -164,6 +202,16 @@ class ConnectionPool:
         if not candidates:  # client holds no connection to a replica: any conn
             candidates = self.connections
         live = [c for c in candidates if not c.node_down and c not in excluded]
+        # Controller-driven issue parallelism: restrict routing to each
+        # node's active-prefix of connections sized from the flow budget
+        # (few deep streams at shallow budgets; all of them at WAN depth).
+        # Narrowing only ever filters the happy path — if it would empty
+        # the candidate set (exclusions, down nodes) full coverage returns.
+        m = self.active_conns_per_node()
+        if m is not None and live:
+            narrowed = [c for c in live if self._conn_rank[c] < m]
+            if narrowed:
+                live = narrowed
         # Bias only the *first* pick toward preferred nodes: hedge and
         # failover re-picks (exclusions present) must divert to another
         # replica, not back onto the same — possibly struggling — node.
@@ -195,20 +243,66 @@ class ConnectionPool:
         t0 = self.clock.now()
         state = {"done": False}
 
+        # Wire-format accounting, decided once per fetch (hedged attempts
+        # bill the same bytes): real payloads get really encoded — the wire
+        # carries ``len(encode(payload))`` — while lazy (size-only) rows use
+        # the codec's deterministic size model.  codec "none" leaves every
+        # value on the legacy path (wire == size, zero CPU, no extra event).
+        encoded: Optional[bytes] = None
+        if self._codec_active:
+            if row.payload is not None or self.materialize:
+                encoded = self.codec.encode(row.payload if row.payload
+                                            is not None else row.materialize())
+                wire = len(encoded)
+            else:
+                wire = self.codec.encoded_size(row.size)
+            enc_s = self.codec.encode_seconds(row.size)
+            dec_s = self.codec.decode_seconds(row.size)
+        else:
+            wire = row.size
+            enc_s = dec_s = 0.0
+
         def complete(conn: SimConnection, hedged: bool, t_done: float) -> None:
             if state["done"]:
                 return  # a hedge lost the race
             state["done"] = True
-            self.bytes_received += row.size
-            if self.controller is not None:
-                self.controller.on_complete(t0, t_done, row.size)
-            name = conn.node_name
-            self.served_by_node[name] = self.served_by_node.get(name, 0) + 1
-            payload = row.materialize() if self.materialize else row.payload
-            on_done(FetchResult(uuid=key, label=row.label, size=row.size,
-                                payload=payload, t_issued=t0, t_done=t_done,
-                                conn_id=conn.conn_id, hedged=hedged,
-                                node=name))
+
+            def deliver(t_ready: float) -> None:
+                self.bytes_received += wire
+                self.payload_bytes_received += row.size
+                if self.controller is not None:
+                    # The controller sees *wire* bytes: its byte-level fair
+                    # caps and the tenant egress accounting stay truthful
+                    # under compression, and the delivery-rate/BDP estimate
+                    # (samples/s x RTT) budgets the effective gain.
+                    self.controller.on_complete(t0, t_ready, wire)
+                name = conn.node_name
+                self.served_by_node[name] = (self.served_by_node.get(name, 0)
+                                             + 1)
+                if encoded is not None:
+                    payload = self.codec.decode(encoded)
+                elif self.materialize:
+                    payload = row.materialize()
+                else:
+                    payload = row.payload
+                on_done(FetchResult(uuid=key, label=row.label, size=row.size,
+                                    payload=payload, t_issued=t0,
+                                    t_done=t_ready, conn_id=conn.conn_id,
+                                    hedged=hedged, node=name,
+                                    wire_size=wire))
+
+            if dec_s > 0.0:
+                # Host-side decode: full single-core latency, 1/cores of
+                # serialized FIFO time (io-threads double as decode
+                # workers) — delivery (and the controller's RTT sample)
+                # waits for the decoded bytes.
+                self.decode_cpu_seconds += dec_s
+                t_ready = max(self._decode_cpu.acquire(t_done,
+                                                       dec_s / HOST_CODEC_CORES),
+                              t_done + dec_s)
+                self.clock.schedule(t_ready - t_done, deliver, t_ready)
+            else:
+                deliver(t_done)
 
         def attempt(conn: SimConnection, hedged: bool, tried: frozenset) -> None:
             self.requests_sent += 1
@@ -240,7 +334,9 @@ class ConnectionPool:
                     return
                 attempt(nxt, hedged, now_tried)
 
-            conn.request(row.size, lambda t: complete(conn, hedged, t), failed)
+            conn.request(row.size, lambda t: complete(conn, hedged, t), failed,
+                         wire_bytes=wire if self._codec_active else None,
+                         encode_seconds=enc_s)
 
         if self.controller is not None:
             self.controller.note_inflight(self.inflight)

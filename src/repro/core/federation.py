@@ -514,7 +514,8 @@ class FederatedConnectionPool:
                  materialize: bool = False,
                  client_ingress_bandwidth: float = NIC_BANDWIDTH,
                  preferred_nodes: Optional[Sequence[str]] = None,
-                 region: Optional[str] = None) -> None:
+                 region: Optional[str] = None,
+                 wire_codec: "str | Dict[str, str] | None" = None) -> None:
         self.clock = clock
         self.federation = federation
         self.cluster = federation          # Cluster-surface alias
@@ -558,7 +559,27 @@ class FederatedConnectionPool:
                 materialize=materialize,
                 preferred_nodes=local_pref or None,
                 ingress=self.ingress,
-                on_exhausted=self._make_exhausted(spec.name))
+                on_exhausted=self._make_exhausted(spec.name),
+                codec=self._member_codec(wire_codec, spec))
+
+    # WAN routes trade cheap node/host CPU for scarce intercontinental
+    # bandwidth; sub-millisecond routes have nothing to buy.  ``"auto"``
+    # draws the line at this RTT (core/wirefmt.py rationale).
+    WAN_CODEC_RTT = 0.010
+    AUTO_WAN_CODEC = "byteshuffle"
+
+    def _member_codec(self, wire_codec, spec) -> Optional[str]:
+        """Per-member codec: a dict maps member name -> codec, ``"auto"``
+        compresses WAN members only, a plain name applies everywhere."""
+        if wire_codec is None:
+            return None
+        if isinstance(wire_codec, dict):
+            return wire_codec.get(spec.name, "none")
+        if wire_codec == "auto":
+            return (self.AUTO_WAN_CODEC
+                    if spec.route_profile().rtt >= self.WAN_CODEC_RTT
+                    else "none")
+        return wire_codec
 
     def attach_flow_control(self, cfg: FlowControlConfig, batch_size: int,
                             limiter: Optional[SharedIngressLimiter] = None
@@ -750,6 +771,10 @@ class FederatedConnectionPool:
     @property
     def bytes_received(self) -> int:
         return sum(p.bytes_received for p in self.pools.values())
+
+    @property
+    def payload_bytes_received(self) -> int:
+        return sum(p.payload_bytes_received for p in self.pools.values())
 
     @property
     def requests_sent(self) -> int:

@@ -540,6 +540,18 @@ class FlowController:
         the queue and feed the controller a bogus loss signal."""
         return self._clock.now() < self._drain_until
 
+    def io_parallelism(self, n_conns: int,
+                       per_conn: int = 32) -> int:
+        """Connections worth keeping active for the current budget
+        (carried-over ROADMAP item: the controller drives issue
+        *parallelism*, not just depth).  Sized so each active connection
+        holds ~``per_conn`` in-flight samples — enough to keep its AIMD
+        process probing — so a shallow local budget runs a few warm
+        streams while a WAN budget fans out to all of them.  Consumed by
+        ``ConnectionPool`` routing when ``io_scaling`` is on."""
+        budget = self._budget_raw(ignore_drain=True)
+        return max(1, min(n_conns, int(math.ceil(budget / max(per_conn, 1)))))
+
     def spare_bdp_samples(self) -> float:
         """Unused in-flight headroom: operating budget minus the measured
         in-flight load.  A member pinned at its budget has ~0 spare; an

@@ -12,6 +12,8 @@ import uuid as _uuid
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
+from .arena import PinnedArena
+from .batch_loader import BatchAssembler
 from .cluster import Cluster
 from .connection import ConnectionPool
 from .flowctl import FlowControlConfig
@@ -57,6 +59,18 @@ class LoaderConfig:
     # Per-key route admission in the prefetcher (see PrefetchConfig):
     # defer keys whose serving route is at its measured budget.
     route_admission: bool = False
+    # Wire codec (core/wirefmt.py): rows travel encoded — the node pays
+    # encode CPU, the wire carries fewer bytes, the client pays decode CPU.
+    # "none" (default) is bit-identical to the pre-codec loader.
+    wire_codec: str = "none"
+    # Controller-driven issue parallelism (needs flow_control="adaptive"):
+    # routing concentrates on a budget-sized active prefix of connections.
+    io_scaling: bool = False
+    # Pinned-arena batch assembly (materialize mode): decoded rows land in
+    # reused contiguous slabs (core/arena.py) instead of per-sample bytes +
+    # a fresh buffer per batch; the device feed uploads whole slabs.
+    use_arena: bool = False
+    arena_slot_bytes: Optional[int] = None   # None = max row size in shard
 
 
 class CassandraLoader:
@@ -86,7 +100,9 @@ class CassandraLoader:
             hedge_after=cfg.hedge_after,
             materialize=cfg.materialize,
             preferred_nodes=cfg.preferred_nodes,
-            ingress=ingress)
+            ingress=ingress,
+            codec=cfg.wire_codec,
+            io_scaling=cfg.io_scaling)
         # An externally-built plan (placement policies, elastic reflow)
         # overrides the default contiguous-strip sharding.
         self.plan = plan or EpochPlan(uuids, seed=cfg.seed,
@@ -111,9 +127,21 @@ class CassandraLoader:
                 or self.pool.attach_flow_control(cfg.flow or FlowControlConfig(),
                                                  cfg.batch_size,
                                                  limiter=flow_limiter))
+        # Pinned-arena assembly: real copies land in reused contiguous slabs
+        # sized for the largest row this shard can see; the device feed
+        # uploads whole slabs (see data/pipeline.ImageFeed).
+        self.arena = None
+        assembler = None
+        if cfg.use_arena and cfg.materialize:
+            slot = cfg.arena_slot_bytes or max(
+                (store.get_data(u).size for u in uuids), default=1)
+            self.arena = PinnedArena(cfg.batch_size, slot, initial_slabs=2)
+            assembler = BatchAssembler(self.clock, real_copy=True,
+                                       arena=self.arena)
         self.prefetcher = make_prefetcher(self.clock, self.pool, self.plan, pcfg,
                                           real_copy=cfg.materialize,
-                                          controller=self.flow_controller)
+                                          controller=self.flow_controller,
+                                          assembler=assembler)
 
     # -- iteration ---------------------------------------------------------
     def start(self, epoch: int = 0, cursor: int = 0) -> "CassandraLoader":
@@ -184,7 +212,8 @@ def tight_loop(loader: CassandraLoader, n_batches: int,
         "batches": n_batches,
         "batch_times": st.batch_times(skip=1),
         "disk_bytes": loader.cluster.total_disk_bytes(),
-        "net_bytes": loader.pool.bytes_received,
+        "net_bytes": loader.pool.bytes_received,          # wire (encoded)
+        "payload_bytes": loader.pool.payload_bytes_received,
     }
 
 

@@ -570,13 +570,22 @@ class SimServerNode:
 
     def __init__(self, name: str, backend: BackendModel, rng: np.random.Generator,
                  disk_bandwidth: float = DISK_BANDWIDTH,
-                 egress_bandwidth: float = NIC_BANDWIDTH) -> None:
+                 egress_bandwidth: float = NIC_BANDWIDTH,
+                 cpu_cores: int = 0) -> None:
         self.name = name
         self.backend = backend
         self._rng = rng
         self.disk = RateResource(f"{name}/disk",
                                  disk_bandwidth * backend.disk_efficiency)
         self.egress = RateResource(f"{name}/egress", egress_bandwidth)
+        # Wire-codec encode pool (core/wirefmt.py): ``cpu_cores`` parallel
+        # encode workers modelled as one FIFO carrying 1/cores of each job's
+        # single-core seconds (aggregate throughput = cores x codec rate)
+        # while serve() adds the full single-core seconds as latency.  0
+        # cores defers to the caller's default at serve time.
+        self.cpu = FifoResource(f"{name}/cpu")
+        self.cpu_cores = cpu_cores
+        self.encode_cpu_seconds = 0.0      # true core-seconds spent encoding
         self._gc_until = 0.0
         self._next_gc = (self._rng.exponential(1.0 / backend.gc_rate)
                          if backend.gc_rate > 0 else float("inf"))
@@ -589,8 +598,18 @@ class SimServerNode:
     def recover(self) -> None:
         self.down = False
 
-    def serve(self, t: float, nbytes: int) -> float:
-        """Return the time at which the response starts leaving the node."""
+    def serve(self, t: float, nbytes: int, wire_bytes: Optional[int] = None,
+              encode_seconds: float = 0.0) -> float:
+        """Return the time at which the response starts leaving the node.
+
+        With a wire codec active the disk still reads *raw* bytes (storage
+        holds rows uncompressed; encoding happens at send time), the encode
+        burns ``encode_seconds`` of one CPU core (serialized through the
+        node's encode pool at ``1/cpu_cores`` weight, so aggregate encode
+        throughput caps at ``cores x codec rate``), and the egress NIC
+        carries the *encoded* ``wire_bytes``.  The default arguments take
+        exactly the pre-codec path — zero extra resource touches.
+        """
         # JVM GC model: periodic stop-the-world pauses that delay everything.
         if self.backend.gc_rate > 0 and t >= self._next_gc:
             pause = self._rng.exponential(self.backend.gc_pause)
@@ -600,8 +619,15 @@ class SimServerNode:
         t += self.backend.service_seconds(self._rng)
         disk_bytes = int(nbytes * self.backend.read_amplification)
         t = self.disk.acquire(t, disk_bytes)
+        if encode_seconds > 0.0:
+            from .wirefmt import NODE_CODEC_CORES
+            cores = self.cpu_cores or NODE_CODEC_CORES
+            self.encode_cpu_seconds += encode_seconds
+            t = max(self.cpu.acquire(t, encode_seconds / cores),
+                    t + encode_seconds)
         self.requests_served += 1
-        return self.egress.acquire(t, nbytes)
+        return self.egress.acquire(t, wire_bytes if wire_bytes is not None
+                                   else nbytes)
 
     @property
     def disk_bytes(self) -> int:
@@ -650,21 +676,31 @@ class SimConnection:
         return self._node.down
 
     def request(self, nbytes: int, on_done: Callable[[float], None],
-                on_fail: Optional[Callable[[float], None]] = None) -> None:
+                on_fail: Optional[Callable[[float], None]] = None,
+                wire_bytes: Optional[int] = None,
+                encode_seconds: float = 0.0) -> None:
+        """Fetch ``nbytes`` of payload.  With a wire codec active the caller
+        passes the *encoded* ``wire_bytes`` (what egress/wire/ingress carry
+        and ``bytes_done`` counts) plus the node-side ``encode_seconds``;
+        the defaults are the exact pre-codec path."""
         if self.inflight >= self.MAX_INFLIGHT:
-            self._pending.append((nbytes, on_done, on_fail))
+            self._pending.append((nbytes, on_done, on_fail,
+                                  wire_bytes, encode_seconds))
             return
-        self._dispatch(nbytes, on_done, on_fail)
+        self._dispatch(nbytes, on_done, on_fail, wire_bytes, encode_seconds)
 
     def _dispatch(self, nbytes: int, on_done: Callable[[float], None],
-                  on_fail: Optional[Callable[[float], None]] = None) -> None:
+                  on_fail: Optional[Callable[[float], None]] = None,
+                  wire_bytes: Optional[int] = None,
+                  encode_seconds: float = 0.0) -> None:
         # Staged events so every shared resource (disk, NIC egress, wire,
         # client ingress) is acquired in true arrival order — a FIFO advanced
         # with out-of-order timestamps would inflate queue waits.
         self.inflight += 1
         jitter = 1.0 + self._route.jitter * float(self._rng.uniform(-1.0, 1.0))
         self._clock.schedule(self._half_rtt(jitter),
-                             self._at_server, nbytes, on_done, on_fail, jitter)
+                             self._at_server, nbytes, on_done, on_fail, jitter,
+                             wire_bytes, encode_seconds)
 
     def _half_rtt(self, jitter: float) -> float:
         """Half-RTT flight time, sampling any latency schedule at event time."""
@@ -673,7 +709,9 @@ class SimConnection:
             rtt *= self._route.latency_multiplier(self._clock.now())
         return 0.5 * rtt * jitter
 
-    def _at_server(self, nbytes: int, on_done, on_fail, jitter: float) -> None:
+    def _at_server(self, nbytes: int, on_done, on_fail, jitter: float,
+                   wire_bytes: Optional[int] = None,
+                   encode_seconds: float = 0.0) -> None:
         if self._node.down or (self._dynamic
                                and self._route.down_at(self._clock.now())):
             # Connection reset (node down, or the route is inside a scheduled
@@ -683,8 +721,11 @@ class SimConnection:
                                  self._fail, on_fail)
             return
         t = self._clock.now()
-        t_out = self._node.serve(t, nbytes)      # service + disk + NIC egress
-        self._clock.schedule(t_out - t, self._at_wire, nbytes, on_done, jitter)
+        # service + disk (+ codec encode CPU) + NIC egress; downstream stages
+        # (wire FIFO, AIMD transfer, client ingress) carry the encoded bytes.
+        t_out = self._node.serve(t, nbytes, wire_bytes, encode_seconds)
+        w = wire_bytes if wire_bytes is not None else nbytes
+        self._clock.schedule(t_out - t, self._at_wire, w, on_done, jitter)
 
     def _fail(self, on_fail: Optional[Callable[[float], None]]) -> None:
         self.inflight -= 1
@@ -718,8 +759,8 @@ class SimConnection:
 
     def _drain_pending(self) -> None:
         if self._pending and self.inflight < self.MAX_INFLIGHT:
-            nb, cb, fb = self._pending.pop(0)
-            self._dispatch(nb, cb, fb)
+            nb, cb, fb, wb, enc = self._pending.pop(0)
+            self._dispatch(nb, cb, fb, wb, enc)
 
     def throughput_series(self, window: float = 0.5):
         """Windowed throughput trace (t, bytes/s) — reproduces Fig. 5/6."""

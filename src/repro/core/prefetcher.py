@@ -512,10 +512,14 @@ class OutOfOrderPrefetcher(_PrefetcherBase):
 
 def make_prefetcher(clock: Clock, pool: ConnectionPool, plan: EpochPlan,
                     cfg: PrefetchConfig, real_copy: bool = False,
-                    controller=None):
+                    controller=None,
+                    assembler: Optional[BatchAssembler] = None):
+    """``assembler`` overrides the default per-batch assembler — how the
+    loader wires in an arena-backed one (``core/arena.py``) so real copies
+    land in reused pinned slabs instead of fresh buffers."""
     cls = OutOfOrderPrefetcher if cfg.out_of_order else InOrderPrefetcher
     return cls(clock, pool, plan, cfg, real_copy=real_copy,
-               controller=controller)
+               controller=controller, assembler=assembler)
 
 
 __all__ = ["PrefetchConfig", "EpochPlan", "compute_reflow",

@@ -60,8 +60,10 @@ def encode_token_record(tokens: np.ndarray, label: int) -> bytes:
     return header + tok.tobytes()
 
 
-def decode_token_record(blob: bytes) -> Tuple[np.ndarray, int]:
-    if blob[:4] != TOKEN_RECORD_MAGIC:
+def decode_token_record(blob) -> Tuple[np.ndarray, int]:
+    """Accepts any byte buffer — including the zero-copy memoryviews an
+    arena-backed batch serves from ``AssembledBatch.payloads()``."""
+    if bytes(blob[:4]) != TOKEN_RECORD_MAGIC:
         raise ValueError("not a token record")
     label, n = struct.unpack("<ii", blob[4:12])
     tokens = np.frombuffer(blob, dtype=np.int32, offset=12, count=n)
@@ -94,6 +96,67 @@ class SyntheticTokenDataset:
                    MetaRow(u, entity, label, {}))
 
 
+@dataclass
+class SyntheticPixelDataset:
+    """Real fixed-size pixel payloads: raw (h, w, c) uint8 frames.
+
+    Every row is exactly ``h*w*c`` bytes with no per-record header — the
+    shape IS the codec — so an arena slab sized to ``nbytes`` holds a whole
+    batch as one contiguous (B, h, w, c) tensor and the device feed can
+    upload it with a single ``device_put`` (see ``data.pipeline.ImageFeed``).
+
+    Frames are piecewise-constant colour fields (smooth sinusoids quantized
+    to 16 levels, one phase set per class): realistic-looking *compressible*
+    bytes, so the ``byteshuffle`` wire codec gets the long runs real images
+    give it — unlike the uniformly random ``DataRow.materialize`` payloads,
+    which are incompressible by construction.
+    """
+
+    n_samples: int = 1024
+    h: int = 32
+    w: int = 32
+    c: int = 3
+    n_classes: int = 10
+    n_entities: int = 64
+    seed: int = 0
+
+    @property
+    def nbytes(self) -> int:
+        """Bytes per frame (== the arena slot size for this dataset)."""
+        return self.h * self.w * self.c
+
+    def make_frame(self, rng: np.random.Generator, label: int) -> np.ndarray:
+        # The sinusoid is sampled on a coarse grid and block-upsampled, so
+        # frames are piecewise-constant in >= (h//8, w//8) blocks — real
+        # byte runs for the byteshuffle codec's RLE stage, not just a claim.
+        by, bx = max(1, self.h // 8), max(1, self.w // 8)
+        gh, gw = -(-self.h // by), -(-self.w // bx)
+        yy = np.linspace(0.0, 1.0, gh)[:, None]
+        xx = np.linspace(0.0, 1.0, gw)[None, :]
+        img = np.empty((self.h, self.w, self.c), dtype=np.uint8)
+        for ch in range(self.c):
+            fy = 1.0 + (label % 3)
+            fx = 1.0 + ((label + ch) % 4)
+            phase = rng.uniform(0.0, 2.0 * np.pi)
+            field = 127.5 + 120.0 * np.sin(
+                2.0 * np.pi * (yy * fy + xx * fx) + phase)
+            coarse = (np.round(field / 16.0) * 16.0).clip(0, 255)
+            full = np.repeat(np.repeat(coarse, by, axis=0), bx, axis=1)
+            img[..., ch] = full[:self.h, :self.w]
+        return img
+
+    def rows(self) -> Iterator[Tuple[DataRow, MetaRow]]:
+        rng = np.random.default_rng(self.seed)
+        for _ in range(self.n_samples):
+            u = make_uuid(rng)
+            label = int(rng.integers(self.n_classes))
+            blob = self.make_frame(rng, label).tobytes()
+            entity = f"ent{int(rng.integers(self.n_entities)):04d}"
+            yield (DataRow(u, label, len(blob), payload=blob),
+                   MetaRow(u, entity, label, {"h": self.h, "w": self.w,
+                                              "c": self.c}))
+
+
 def ingest(store: KVStore, dataset, parallel: int = 1) -> List[_uuid.UUID]:
     """Serial or chunked-parallel ingestion; returns inserted UUIDs in order.
 
@@ -120,6 +183,7 @@ def ingest(store: KVStore, dataset, parallel: int = 1) -> List[_uuid.UUID]:
     return uuids
 
 
-__all__ = ["SyntheticImageDataset", "SyntheticTokenDataset", "ingest",
+__all__ = ["SyntheticImageDataset", "SyntheticTokenDataset",
+           "SyntheticPixelDataset", "ingest",
            "encode_token_record", "decode_token_record",
            "IMAGENET_MEAN_BYTES", "IMAGENET_TRAIN_IMAGES"]

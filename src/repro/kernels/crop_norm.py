@@ -39,10 +39,16 @@ def crop_mirror_normalize(img: jax.Array, oy: jax.Array, ox: jax.Array,
                           mirror: jax.Array, mean: jax.Array, std: jax.Array,
                           out_h: int, out_w: int, dtype=jnp.float32, *,
                           interpret: bool = True) -> jax.Array:
-    """img (B,H,W,C) uint8 -> (B,C,out_h,out_w) normalized."""
+    """img (B,H,W,C) uint8 -> (B,C,out_h,out_w) normalized.
+
+    Crop offsets are clamped to the valid window so an out-of-range offset
+    degrades to an edge crop instead of relying on dynamic-slice's silent
+    index adjustment (keeps kernel and NumPy reference bit-aligned).
+    """
     B, H, W, C = img.shape
-    scalars = jnp.stack([oy.astype(jnp.int32), ox.astype(jnp.int32),
-                         mirror.astype(jnp.int32)], axis=1)     # (B, 3)
+    oy = jnp.clip(oy.astype(jnp.int32), 0, H - out_h)
+    ox = jnp.clip(ox.astype(jnp.int32), 0, W - out_w)
+    scalars = jnp.stack([oy, ox, mirror.astype(jnp.int32)], axis=1)  # (B, 3)
     kernel = functools.partial(_crop_kernel, out_h=out_h, out_w=out_w)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

@@ -1,4 +1,6 @@
-"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests) —
+plus a pure-NumPy ``crop_mirror_normalize_np`` that doubles as the host-side
+baseline transform in ``data.pipeline.ImageFeed``."""
 
 from __future__ import annotations
 
@@ -6,6 +8,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 NEG_INF = -1e30
 
@@ -68,6 +71,31 @@ def crop_mirror_normalize_reference(img: jax.Array, oy: jax.Array,
     return jax.vmap(one)(img, oy, ox, mirror)
 
 
+def crop_mirror_normalize_np(img: np.ndarray, oy, ox, mirror,
+                             mean: np.ndarray, std: np.ndarray,
+                             out_h: int, out_w: int,
+                             dtype=np.float32) -> np.ndarray:
+    """NumPy twin of the Pallas kernel: (B,H,W,C) uint8 -> (B,C,oh,ow).
+
+    Same clamping semantics as the kernel entry point (offsets clip to the
+    valid window).  Also serves as ``ImageFeed``'s materialize-path host
+    transform — the four-pass CPU pipeline the fused kernel replaces.
+    """
+    B, H, W, C = img.shape
+    oy = np.clip(np.asarray(oy, dtype=np.int64), 0, H - out_h)
+    ox = np.clip(np.asarray(ox, dtype=np.int64), 0, W - out_w)
+    mean = np.asarray(mean, dtype=np.float32)
+    std = np.asarray(std, dtype=np.float32)
+    out = np.empty((B, C, out_h, out_w), dtype=dtype)
+    for i in range(B):
+        crop = img[i, oy[i]:oy[i] + out_h, ox[i]:ox[i] + out_w, :]
+        if mirror[i]:
+            crop = crop[:, ::-1, :]
+        x = (crop.astype(np.float32) - mean) / std
+        out[i] = x.transpose(2, 0, 1).astype(dtype)
+    return out
+
+
 def gmm_reference(x: jax.Array, w: jax.Array) -> jax.Array:
     """Grouped (per-expert) matmul: x (E,C,d) @ w (E,d,f) -> (E,C,f)."""
     return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
@@ -75,4 +103,5 @@ def gmm_reference(x: jax.Array, w: jax.Array) -> jax.Array:
 
 
 __all__ = ["mha_reference", "decode_reference",
-           "crop_mirror_normalize_reference", "gmm_reference"]
+           "crop_mirror_normalize_reference", "crop_mirror_normalize_np",
+           "gmm_reference"]

@@ -1,0 +1,165 @@
+"""Pinned arena: slab reuse, zero-copy views, arena-backed batch assembly."""
+
+import numpy as np
+import pytest
+
+from repro.core import (ArenaSlab, CassandraLoader, KVStore, LoaderConfig,
+                        PinnedArena)
+from repro.data.datasets import (SyntheticPixelDataset, SyntheticTokenDataset,
+                                 decode_token_record, ingest)
+
+
+# -- slab mechanics ----------------------------------------------------------
+
+
+def test_slab_write_view_roundtrip():
+    slab = ArenaSlab(batch_size=4, slot_bytes=16)
+    slab.write(0, b"hello", 5)
+    slab.write(1, b"0123456789abcdefOVERFLOW", 24)   # clipped to the slot
+    slab.write(2, None, 8)                           # missing payload
+    assert bytes(slab.view(0)) == b"hello"
+    assert bytes(slab.view(1)) == b"0123456789abcdef"
+    assert bytes(slab.view(2)) == b""
+    assert bytes(slab.view(0, size=3)) == b"hel"
+
+
+def test_slab_reuse_zeroes_stale_tail():
+    arena = PinnedArena(batch_size=2, slot_bytes=8)
+    slab = arena.acquire()
+    slab.write(0, b"AAAAAAAA", 8)
+    slab.release()
+    again = arena.acquire()
+    assert again is slab                             # same buffer recycled
+    again.write(0, b"bb", 2)
+    # a shorter write must not leak the previous batch's bytes
+    assert bytes(again.buf[0]) == b"bb" + b"\x00" * 6
+    assert bytes(again.view(0)) == b"bb"
+
+
+def test_slab_pixels_view_shares_memory():
+    arena = PinnedArena(batch_size=2, slot_bytes=12)
+    slab = arena.acquire()
+    slab.write(0, bytes(range(12)), 12)
+    px = slab.pixels(2, 2, 3)
+    assert px.shape == (2, 2, 2, 3)
+    assert px.base is not None                       # a view, not a copy
+    np.testing.assert_array_equal(px[0].ravel(), np.arange(12))
+    with pytest.raises(ValueError):
+        slab.pixels(4, 4, 3)                         # larger than the slot
+
+
+def test_arena_reuse_and_idempotent_release():
+    arena = PinnedArena(batch_size=2, slot_bytes=4, initial_slabs=2)
+    a, b = arena.acquire(), arena.acquire()
+    assert arena.slabs_created == 2 and arena.outstanding == 2
+    a.release()
+    a.release()                                      # idempotent
+    st = arena.stats()
+    assert st["outstanding"] == 1
+    c = arena.acquire()
+    assert c is a                                    # LIFO reuse
+    assert arena.slabs_created == 2                  # nothing new allocated
+    b.release(), c.release()
+    assert arena.stats()["outstanding"] == 0
+    with pytest.raises(ValueError):
+        arena.release(ArenaSlab(3, 4))               # foreign geometry
+
+
+def test_arena_grows_only_under_pressure():
+    arena = PinnedArena(batch_size=1, slot_bytes=1, initial_slabs=1)
+    held = [arena.acquire() for _ in range(4)]       # consumer hoards slabs
+    assert arena.slabs_created == 4
+    assert arena.stats()["high_water"] >= 4
+    for s in held:
+        s.release()
+    for _ in range(10):
+        arena.acquire().release()
+    assert arena.slabs_created == 4                  # steady state: reuse
+
+
+def test_bad_geometry_rejected():
+    with pytest.raises(ValueError):
+        PinnedArena(0, 16)
+    with pytest.raises(ValueError):
+        PinnedArena(16, 0)
+
+
+# -- arena-backed loader batches ---------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def token_store():
+    store = KVStore()
+    uuids = ingest(store, SyntheticTokenDataset(n_samples=512, seq_len=32,
+                                                seed=2))
+    return store, uuids
+
+
+def _arena_loader(store, uuids, **kw):
+    cfg = LoaderConfig(batch_size=32, prefetch_buffers=2, route="local",
+                       materialize=True, use_arena=True, seed=3, **kw)
+    return CassandraLoader(store, uuids, cfg)
+
+
+def test_arena_batch_payloads_decode(token_store):
+    store, uuids = token_store
+    ld = _arena_loader(store, uuids)
+    ld.start()
+    batch = ld.next_batch()
+    assert batch.slab is not None
+    assert all(s.payload is None for s in batch.samples)   # slab owns bytes
+    for s, payload in zip(batch.samples, batch.payloads()):
+        toks, label = decode_token_record(payload)         # memoryview OK
+        assert label == s.label
+        assert toks.size == 32
+    assert batch.nbytes == sum(s.size for s in batch.samples)
+    batch.release()
+    assert ld.arena.stats()["outstanding"] < ld.arena.acquires
+
+
+def test_arena_slabs_cycle_through_epoch(token_store):
+    store, uuids = token_store
+    ld = _arena_loader(store, uuids)
+    ld.start()
+    for _ in range(10):
+        ld.next_batch().release()
+    st = ld.arena.stats()
+    assert st["reuses"] > 0
+    # prefetch depth bounds the pool; never one-slab-per-batch
+    assert st["slabs_created"] < 10
+
+
+def test_pixels_requires_arena(token_store):
+    store, uuids = token_store
+    cfg = LoaderConfig(batch_size=8, prefetch_buffers=2, route="local",
+                       materialize=True, seed=3)
+    ld = CassandraLoader(store, uuids, cfg)
+    ld.start()
+    batch = ld.next_batch()
+    assert batch.slab is None
+    with pytest.raises(ValueError):
+        batch.pixels(2, 4, 4)
+    batch.release()                                  # no-op without a slab
+
+
+def test_arena_pixel_batches_match_payload_bytes():
+    ds = SyntheticPixelDataset(n_samples=128, h=8, w=8, c=3, seed=11)
+    store = KVStore()
+    uuids = ingest(store, ds)
+    ld = _arena_loader(store, uuids, arena_slot_bytes=ds.nbytes)
+    ld.start()
+    batch = ld.next_batch()
+    px = batch.pixels(ds.h, ds.w, ds.c)
+    assert px.shape == (32, 8, 8, 3)
+    for i, s in enumerate(batch.samples):
+        expect = np.frombuffer(store.get_data(s.uuid).payload,
+                               dtype=np.uint8).reshape(8, 8, 3)
+        np.testing.assert_array_equal(px[i], expect)
+
+
+def test_arena_ignored_without_materialize(token_store):
+    store, uuids = token_store
+    cfg = LoaderConfig(batch_size=8, prefetch_buffers=2, route="local",
+                       use_arena=True, seed=3)     # lazy rows: no payloads
+    ld = CassandraLoader(store, uuids, cfg)
+    assert ld.arena is None

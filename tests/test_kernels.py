@@ -82,6 +82,51 @@ def test_crop_mirror_normalize_property(oy, ox, mirror, out_h, out_w):
                                rtol=1e-6, atol=1e-6)
 
 
+@given(seed=st.integers(0, 2 ** 16), mirror=st.booleans(),
+       out_h=st.integers(4, 24), out_w=st.integers(4, 24))
+@settings(max_examples=20, deadline=None)
+def test_crop_mirror_normalize_matches_numpy_ref(seed, mirror, out_h, out_w):
+    """Kernel == pure-NumPy reference on uint8 data that includes the edge
+    values 0 and 255 (where a uint8->f32 conversion bug would show)."""
+    rng = np.random.default_rng(seed)
+    B, H, W, C = 3, 24, 24, 3
+    img = rng.integers(0, 256, size=(B, H, W, C)).astype(np.uint8)
+    img[0, 0, 0, :] = 0
+    img[0, -1, -1, :] = 255
+    img[1] = 255                                   # saturated frame
+    oy = rng.integers(0, H - out_h + 1, size=B).astype(np.int32)
+    ox = rng.integers(0, W - out_w + 1, size=B).astype(np.int32)
+    mir = np.array([mirror, not mirror, mirror], dtype=np.int32)
+    mean = np.array([120.0, 115.0, 100.0], dtype=np.float32)
+    std = np.array([60.0, 61.0, 62.0], dtype=np.float32)
+    got = ops.crop_mirror_normalize(
+        jnp.asarray(img), jnp.asarray(oy), jnp.asarray(ox), jnp.asarray(mir),
+        jnp.asarray(mean), jnp.asarray(std), out_h=out_h, out_w=out_w)
+    want = ref.crop_mirror_normalize_np(img, oy, ox, mir, mean, std,
+                                        out_h, out_w)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6, atol=1e-6)
+
+
+def test_crop_mirror_normalize_clamps_offsets():
+    """Out-of-range crop offsets degrade to edge crops in BOTH the kernel
+    and the NumPy reference (same clamping semantics)."""
+    rng = np.random.default_rng(7)
+    img = rng.integers(0, 256, size=(2, 16, 16, 3)).astype(np.uint8)
+    oy = np.array([100, -5], dtype=np.int32)       # way past both edges
+    ox = np.array([-3, 99], dtype=np.int32)
+    mir = np.zeros(2, dtype=np.int32)
+    mean = np.zeros(3, dtype=np.float32)
+    std = np.ones(3, dtype=np.float32)
+    got = ops.crop_mirror_normalize(
+        jnp.asarray(img), jnp.asarray(oy), jnp.asarray(ox), jnp.asarray(mir),
+        jnp.asarray(mean), jnp.asarray(std), out_h=8, out_w=8)
+    want = ref.crop_mirror_normalize_np(img, oy, ox, mir, mean, std, 8, 8)
+    clamped = ref.crop_mirror_normalize_np(
+        img, np.array([8, 0]), np.array([0, 8]), mir, mean, std, 8, 8)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(want, clamped, rtol=1e-6, atol=1e-6)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("E,C,d,f,bc,bf,bd", [
     (4, 64, 96, 64, 32, 32, 32),

@@ -27,6 +27,8 @@ Usage (CI runs exactly this, see .github/workflows/ci.yml):
     PYTHONPATH=src python -m benchmarks.bench_multihost --replication --quick
     PYTHONPATH=src python -m benchmarks.bench_scenarios --quick
     PYTHONPATH=src python -m benchmarks.bench_training --goodput --quick
+    PYTHONPATH=src python -m benchmarks.bench_tenancy --quick
+    PYTHONPATH=src python -m benchmarks.bench_wirefmt --quick
     python tools/bench_check.py
 
 Baseline update procedure (after an intentional perf change):
@@ -102,6 +104,24 @@ SPECS = {
             "untenanted.aggregate_MBps",
             "tenanted.aggregate_MBps",
             "tenanted.serve_MBps",
+        ],
+    },
+    "wirefmt.json": {
+        # the codec-gain / budget-convergence / arena-equivalence claims are
+        # boolean `checks` asserted by the bench itself; the baselines guard
+        # the operating points they are computed from.  Wall-clock numbers
+        # (host_cpu_ratio, host_prep_s) are deliberately NOT gated here —
+        # only the virtual-clock metrics are machine-independent.
+        "context": ["quick", "batch_size", "n_samples", "n_batches", "seed"],
+        "metrics": [
+            "codec.cells.high.none.MBps",
+            "codec.cells.high.byteshuffle.MBps",
+            "codec.cells.high.byteshuffle.wire_MB",
+            "codec.cells.high.byteshuffle.payload_MB",
+            "codec.cells.local.none.MBps",
+            "codec.cells.local.byteshuffle.MBps",
+            "codec.gain_high",
+            "codec.budget_ratio",
         ],
     },
     "scenarios.json": {
