@@ -1,0 +1,152 @@
+"""Competitor baselines vs our adaptive stack — the paper's Table 2/3 story.
+
+Three loaders, same simulated environment (store, routes, virtual clock),
+so the comparison isolates *loader strategy* from network weather:
+
+* **SD** — ``RecordShardLoader`` (MosaicML StreamingDataset model):
+  pre-packed record shards streamed over fresh S3-style connections
+  (2-RTT setup, AIMD ramp from half rate, per-GET stream cap).
+* **sync** — ``SyncWindowLoader`` (tf.data service model): synchronous
+  bounded-window streaming; throughput ~ window/(RTT + overhead).
+* **ours** — the adaptive stack built by ``repro.core.build_stack``:
+  persistent connection pool, out-of-order completion, incremental ramp,
+  BDP-tracking flow control.
+
+Both baselines are codec-free by design (see ``core/competitors.py``); ours
+runs codec-free here too, so the table measures loader *strategy* alone —
+the wire-codec gain on top is ``bench_wirefmt``'s story.
+
+One table, three route cells (local / med / high=150 ms intercontinental).
+The headline acceptance check: **ours >= both baselines on the high
+(intercontinental) route** — hiding latency at distance is the paper's
+entire point.  Results land in ``results/competitors.json`` (gated against
+``benchmarks/baselines/competitors.json`` in CI).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.core import (Cluster, LoaderConfig, VirtualClock, build_stack,
+                        tight_loop)
+from repro.core.competitors import (RecordShardLoader, SyncWindowLoader,
+                                    build_shards)
+
+from .common import RESULTS_DIR, make_store
+
+ROUTES = ("local", "med", "high")
+BATCH = 256
+SHARD_BYTES = 64 * 2 ** 20
+PREDOWNLOAD = 8
+SEED = 7
+
+
+def _run_sd(store, uuids, route: str, n_batches: int) -> float:
+    clock = VirtualClock()
+    cluster = Cluster(clock, store, backend="scylla", n_nodes=1,
+                      seed=SEED + 5)
+    shards = build_shards(store, uuids, shard_bytes=SHARD_BYTES)
+    ld = RecordShardLoader(clock, cluster, route, shards, batch_size=BATCH,
+                           predownload=PREDOWNLOAD, seed=SEED).start()
+    for _ in range(n_batches):
+        ld.next_batch(timeout=3000.0)
+    return ld.throughput(skip=2)
+
+
+def _run_sync(store, uuids, route: str, n_batches: int) -> float:
+    clock = VirtualClock()
+    cluster = Cluster(clock, store, backend="scylla", n_nodes=1,
+                      seed=SEED + 5)
+    avg = int(sum(store.get_data(u).size for u in uuids) / len(uuids))
+    ld = SyncWindowLoader(clock, cluster, route, avg_sample_bytes=avg,
+                          batch_size=BATCH, seed=SEED).start()
+    for _ in range(n_batches):
+        ld.next_batch(timeout=3000.0)
+    return ld.throughput(skip=2)
+
+
+def _run_ours(store, uuids, route: str, n_batches: int) -> float:
+    # The paper configuration (Listing 3 defaults + adaptive flow control),
+    # deliberately codec-free to match the baselines' wire model.
+    cfg = LoaderConfig(batch_size=BATCH, prefetch_buffers=16, io_threads=16,
+                       conns_per_thread=2, route=route, backend="scylla",
+                       seed=SEED, flow_control="adaptive")
+    stack = build_stack(store=store, uuids=uuids, config=cfg)
+    res = tight_loop(stack.loader, n_batches, timeout=3000.0)
+    return res["throughput_Bps"]
+
+
+def run_table(quick: bool = False) -> str:
+    n_samples = 12_000 if quick else 48_000
+    n_batches = 24 if quick else 96
+    store, uuids = make_store(n_samples=n_samples, seed=0)
+
+    cells = {}
+    lines = [f"  {'route':>6s} {'ours MB/s':>10s} {'SD MB/s':>10s} "
+             f"{'sync MB/s':>10s} {'ours/SD':>8s} {'ours/sync':>9s}"]
+    for route in ROUTES:
+        ours = _run_ours(store, uuids, route, n_batches) / 1e6
+        sd = _run_sd(store, uuids, route, n_batches) / 1e6
+        sync = _run_sync(store, uuids, route, n_batches) / 1e6
+        cells[route] = {"ours_MBps": ours, "sd_MBps": sd, "sync_MBps": sync}
+        lines.append(f"  {route:>6s} {ours:10.1f} {sd:10.1f} {sync:10.1f} "
+                     f"{ours / max(sd, 1e-9):7.1f}x "
+                     f"{ours / max(sync, 1e-9):8.1f}x")
+    hi = cells["high"]
+    lines.append(f"  -> high (150 ms) route: ours {hi['ours_MBps']:.1f} vs "
+                 f"SD {hi['sd_MBps']:.1f} and sync {hi['sync_MBps']:.1f} "
+                 f"MB/s (acceptance: ours >= both)")
+
+    results = {
+        "quick": quick, "seed": SEED, "batch_size": BATCH,
+        "n_samples": n_samples, "n_batches": n_batches,
+        "shard_bytes": SHARD_BYTES,
+        "cells": cells,
+        "checks": {
+            # the paper's headline: latency hiding wins at distance
+            "ours_beats_sd_on_high":
+                hi["ours_MBps"] >= hi["sd_MBps"],
+            "ours_beats_sync_on_high":
+                hi["ours_MBps"] >= hi["sync_MBps"],
+            # the failure modes the baselines model must actually appear:
+            # SD's fresh-connection GETs degrade with RTT, sync's bounded
+            # window collapses with it (Table 3)
+            "sd_degrades_with_distance":
+                cells["high"]["sd_MBps"] < cells["local"]["sd_MBps"],
+            "sync_collapses_with_distance":
+                cells["high"]["sync_MBps"]
+                < 0.1 * cells["local"]["sync_MBps"],
+        },
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "competitors.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    with open(path) as f:                      # assert from the artifact
+        written = json.load(f)
+    failed = [name for name, ok in written["checks"].items() if not ok]
+    if failed:
+        raise AssertionError(f"competitor checks failed: {failed} "
+                             f"(see {path})")
+    lines.append(f"  checks: all {len(written['checks'])} passed -> "
+                 f"{os.path.relpath(path)}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> None:
+    # argv=None means "no flags" — benchmarks.run calls main() bare, and its
+    # own positional bench names must not leak into this parser
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI size: smaller dataset and fewer batches")
+    args = ap.parse_args([] if argv is None else argv)
+    print("# Competitor baselines vs adaptive stack — local/med/high table"
+          + (" (quick)" if args.quick else ""))
+    print(run_table(quick=args.quick))
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1:])

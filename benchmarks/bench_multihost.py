@@ -18,6 +18,12 @@ Three extra sections cover the elastic/placement/federation features:
   egress + WAN-bytes share), vs an all-local baseline, with and without a
   cluster-level outage degrading reads to the replica cluster.  The full
   run reports land in ``results/multihost_federation.json``.
+* 1000-host scale-out (``--scale`` to run it alone, ``--quick`` for the CI
+  size) — 1000 hosts over a 3-cluster local/med/high federation in one
+  virtual run: the cell the calendar-queue event core exists for.  Asserts
+  wall-clock within the CI bench budget and an events/sec floor; the
+  deterministic virtual-clock metrics land in ``results/multihost_scale.json``
+  and are gated by ``tools/bench_check.py``.
 * hot-key replication (``--replication`` to run it alone, ``--quick`` for
   the CI size) — the skewed-access scenario: a Zipf sampler over the keys
   of the same local+intercontinental federation opens a throughput gap
@@ -205,6 +211,109 @@ def _federation_section(store, uuids, seed: int, rows) -> list:
 
 
 # ---------------------------------------------------------------------------
+# 1000-host scale-out: the calendar-queue event core at full width
+# ---------------------------------------------------------------------------
+
+SCALE_HOSTS = 1000
+SCALE_CLUSTERS = (("us", "local"), ("eu", "med"), ("ap", "high"))
+# Wall-clock budget for the quick CI cell and a floor on the event core's
+# throughput.  Both are deliberately loose (~5-10x headroom on a dev box):
+# they exist to catch the event core regressing to the pre-calendar-queue
+# O(n log n)-with-allocation regime, not to benchmark the CI runner.
+SCALE_WALL_BUDGET_S = 120.0
+SCALE_EVENTS_PER_SEC_FLOOR = 8_000.0
+
+
+def _scale_cfg(batch_size: int, seed: int) -> MultiHostConfig:
+    specs = tuple(ClusterSpec(name, route=route, n_nodes=8,
+                              replication_factor=2,
+                              node_egress_bandwidth=NODE_EGRESS)
+                  for name, route in SCALE_CLUSTERS)
+    # 2 io_threads x 1 conn keeps the sim at 6k connections total — wide,
+    # not deep: the point is 1000 concurrent hosts, not per-host depth.
+    return MultiHostConfig(n_hosts=SCALE_HOSTS, batch_size=batch_size,
+                           prefetch_buffers=4, io_threads=2,
+                           conns_per_thread=1, seed=seed,
+                           placement="cluster_aware", clusters=specs)
+
+
+def run_scale(seed: int = 23, quick: bool = False) -> str:
+    """1000 hosts x 3 clusters (local/med/high routes) in one virtual run.
+
+    The cell the calendar-queue event core exists for: ~150k simulated
+    events per round-pair across 6000 connections.  Asserts the quick cell
+    finishes inside the CI bench budget and that the event core sustains a
+    committed events/sec floor; the virtual-clock metrics (aggregate MB/s,
+    fairness, WAN share, total event count) are machine-independent and
+    gated by ``tools/bench_check.py`` against a committed baseline.
+    """
+    import time as _time
+    n_samples, rounds, batch = (48_000, 2, 16) if quick else (224_000, 6, 32)
+    store, uuids = make_store(n_samples=n_samples)
+    lines = [f"scale-out ({SCALE_HOSTS} hosts, "
+             f"{len(SCALE_CLUSTERS)} clusters "
+             f"{'/'.join(r for _, r in SCALE_CLUSTERS)}, "
+             f"{rounds} rounds x batch {batch}):"]
+    t0 = _time.perf_counter()
+    mh = MultiHostRun(store, uuids, _scale_cfg(batch, seed)).start()
+    setup_s = _time.perf_counter() - t0
+    delivered = [0]
+
+    def _count(host_id, batch_obj):
+        delivered[0] += 1
+
+    ev0 = mh.clock.events_processed
+    t0 = _time.perf_counter()
+    rep = mh.run(rounds, on_batch=_count)
+    wall_s = _time.perf_counter() - t0
+    events = mh.clock.events_processed - ev0
+    eps = events / max(wall_s, 1e-9)
+    expect = SCALE_HOSTS * rounds
+    lines.append(f"  setup {setup_s:.1f}s, run {wall_s:.1f}s wall "
+                 f"({rep['elapsed_s']:.1f}s virtual) — {events} events, "
+                 f"{eps/1e3:.0f}k events/s "
+                 f"(floor {SCALE_EVENTS_PER_SEC_FLOOR/1e3:.0f}k)")
+    lines.append(f"  aggregate {rep['aggregate_Bps']/1e6:.0f} MB/s, "
+                 f"fairness {rep['fairness']:.2f}, WAN share "
+                 f"{rep['wan_bytes_share']:.2f}, replica-local "
+                 f"{rep['replica_local_hit_frac']:.2f}, "
+                 f"{delivered[0]}/{expect} batches delivered")
+    results = {
+        "quick": quick, "seed": seed,
+        "n_hosts": SCALE_HOSTS, "n_clusters": len(SCALE_CLUSTERS),
+        "rounds": rounds, "batch_size": batch, "n_samples": n_samples,
+        # virtual-clock metrics: deterministic, gated against the baseline
+        "aggregate_MBps": rep["aggregate_Bps"] / 1e6,
+        "fairness": rep["fairness"],
+        "wan_bytes_share": rep["wan_bytes_share"],
+        "replica_local_hit_frac": rep["replica_local_hit_frac"],
+        "virtual_elapsed_s": rep["elapsed_s"],
+        "events_total": events,
+        # wall-clock numbers: recorded for the log, machine-dependent,
+        # deliberately NOT in the bench_check metric list
+        "setup_s": setup_s, "wall_s": wall_s, "events_per_sec": eps,
+        "checks": {
+            "all_batches_delivered": delivered[0] == expect,
+            "every_host_made_progress": min(rep["per_client_Bps"]) > 0.0,
+            "wall_within_ci_budget": wall_s <= SCALE_WALL_BUDGET_S,
+            "events_per_sec_floor": eps >= SCALE_EVENTS_PER_SEC_FLOOR,
+        },
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "multihost_scale.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    with open(path) as f:                      # assert from the artifact
+        written = json.load(f)
+    failed = [name for name, ok in written["checks"].items() if not ok]
+    if failed:
+        raise AssertionError(f"scale checks failed: {failed} (see {path})")
+    lines.append(f"  checks: all {len(written['checks'])} passed -> "
+                 f"{os.path.relpath(path)}")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
 # Hot-key replication: skewed (Zipf) access over the WAN federation
 # ---------------------------------------------------------------------------
 
@@ -335,6 +444,8 @@ def main(argv=None) -> None:
     ap.add_argument("--replication", action="store_true",
                     help="run only the hot-key replication / rebalancing "
                          "section")
+    ap.add_argument("--scale", action="store_true",
+                    help="run only the 1000-host x 3-cluster scale point")
     ap.add_argument("--quick", action="store_true",
                     help="CI size: smaller dataset and fewer rounds")
     args = ap.parse_args([] if argv is None else argv)
@@ -343,9 +454,17 @@ def main(argv=None) -> None:
               + (" (quick)" if args.quick else ""))
         print(run_replication(quick=args.quick))
         return
+    if args.scale:
+        print("# 1000-host scale-out"
+              + (" (quick)" if args.quick else ""))
+        print(run_scale(quick=args.quick))
+        return
     print(f"# Multi-host scaling — {N_NODES}-node cluster, 10 GbE node NICs, "
           "high-latency route")
     print(run())
+    print()
+    print("# 1000-host scale-out")
+    print(run_scale(quick=args.quick))
     print()
     print("# Hot-key replication & ownership rebalancing"
           + (" (quick)" if args.quick else ""))

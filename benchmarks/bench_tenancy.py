@@ -34,7 +34,7 @@ import argparse
 import json
 import os
 
-from repro.core import MultiHostConfig, MultiHostRun, TenantSpec
+from repro.core import MultiHostConfig, TenantSpec, build_stack
 
 from .common import RESULTS_DIR, make_store
 
@@ -68,7 +68,7 @@ def _cfg(n_hosts: int, **kw) -> MultiHostConfig:
 
 
 def _measure(store, uuids, cfg, rounds: int) -> dict:
-    run = MultiHostRun(store, uuids, cfg).start()
+    run = build_stack(store=store, uuids=uuids, config=cfg, start=True).run
     run.run(rounds)             # warm-up: slow-start ramp + filter windows
     rep = run.run(rounds)
     out = {

@@ -35,14 +35,11 @@ import os
 
 import numpy as np
 
-from repro.core import (CassandraLoader, Cluster, KVStore, LoaderConfig,
-                        VirtualClock)
-from repro.core.connection import ConnectionPool
+from repro.core import (Cluster, KVStore, LoaderConfig, VirtualClock,
+                        build_stack)
 from repro.core.competitors import RecordShardLoader, build_shards
-from repro.core.netsim import TIERS, RateResource, NIC_BANDWIDTH
-from repro.core.prefetcher import EpochPlan, PrefetchConfig, make_prefetcher
+from repro.core.netsim import RateResource, NIC_BANDWIDTH
 from repro.data.datasets import SyntheticTokenDataset, ingest
-from repro.data.pipeline import DeviceFeed
 
 from .common import RESULTS_DIR, make_store, write_csv
 
@@ -79,26 +76,30 @@ def _consume_round_robin(clock, loaders, n_batches: int, step_time: float,
 
 
 def run_ours(route: str, seed: int = 1, n_batches: int = 60) -> float:
-    """8 loaders (one per GPU) sharing one cluster + client NIC."""
+    """8 loaders (one per GPU) sharing one cluster + client NIC.
+
+    Each GPU's stack comes from one ``build_stack`` call; the shared clock,
+    cluster, and client-NIC ``RateResource`` are passed through, so all
+    eight loaders contend on the same simulated machine — the facade
+    spelling of what this bench used to hand-wire from pool + plan +
+    prefetcher parts.
+    """
     store, uuids = make_store()
     clock = VirtualClock()
     cluster = Cluster(clock, store, backend="scylla", seed=seed)
     shared_ingress = RateResource("client/ingress", NIC_BANDWIDTH)
     loaders = []
     for g in range(N_GPUS):
+        # one shared plan seed (every shard computes the same global
+        # shuffle); pool randomness decorrelates per shard_id inside the
+        # loader
         cfg = LoaderConfig(batch_size=BATCH, prefetch_buffers=8, io_threads=4,
-                           route=route, seed=seed + g, shard_id=g,
+                           route=route, seed=seed, shard_id=g,
                            num_shards=N_GPUS)
-        # all GPUs share the NIC — passed at construction so every
-        # connection is built against the shared RateResource
-        pool = ConnectionPool(clock, cluster, TIERS[route],
-                              io_threads=cfg.io_threads, seed=seed + 31 * g,
-                              ingress=shared_ingress)
-        plan = EpochPlan(uuids, seed=seed, shard_id=g, num_shards=N_GPUS)
-        pf = make_prefetcher(clock, pool, plan,
-                             PrefetchConfig(batch_size=BATCH))
-        pf.start()
-        loaders.append(pf)
+        stack = build_stack(store=store, uuids=uuids, config=cfg,
+                            clock=clock, cluster=cluster,
+                            ingress=shared_ingress, start=True)
+        loaders.append(stack.loader)
     return _consume_round_robin(clock, loaders, n_batches, STEP_TIME)
 
 
@@ -222,17 +223,20 @@ def check_exactly_once(store, uuids, route: str = "med",
     n_total = len(uuids) // GOODPUT_BATCH
     k = 5
     seen = []
-    loader = CassandraLoader(store, uuids, cfg)
-    feed = DeviceFeed(loader, GOODPUT_SEQ)
+    stack = build_stack(store=store, uuids=uuids, config=cfg,
+                        feed="device", seq_len=GOODPUT_SEQ)
+    feed = stack.feed
     for _ in range(k):
         _, meta = next(feed)
         seen.extend(str(s.uuid) for s in meta.samples)
     pos = feed.state()
-    loader.close()
+    stack.close()
 
-    loader2 = CassandraLoader(store, uuids, cfg)
+    stack2 = build_stack(store=store, uuids=uuids, config=cfg,
+                         feed="device", seq_len=GOODPUT_SEQ)
+    loader2 = stack2.loader
     loader2.start(epoch=pos["epoch"], cursor=pos["cursor"])
-    feed2 = DeviceFeed(loader2, GOODPUT_SEQ)
+    feed2 = stack2.feed
     for _ in range(n_total - k):
         _, meta = next(feed2)
         seen.extend(str(s.uuid) for s in meta.samples)

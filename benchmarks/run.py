@@ -10,7 +10,8 @@ import sys
 import time
 
 ALL = ["tightloop", "training", "batch_times", "connections", "backends",
-       "ramp", "multihost", "scenarios", "tenancy", "roofline"]
+       "ramp", "multihost", "scenarios", "tenancy", "competitors",
+       "roofline"]
 
 
 def main() -> None:

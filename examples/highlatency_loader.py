@@ -6,7 +6,7 @@ Run: PYTHONPATH=src python examples/highlatency_loader.py
 
 import numpy as np
 
-from repro.core import KVStore, LoaderConfig, CassandraLoader, tight_loop
+from repro.core import KVStore, LoaderConfig, build_stack, tight_loop
 from repro.data.datasets import SyntheticImageDataset, ingest
 
 
@@ -27,7 +27,7 @@ def main() -> None:
                            out_of_order=ooo, incremental_ramp=ramp,
                            route="high", backend="scylla", seed=2,
                            flow_control=flow)
-        ld = CassandraLoader(store, uuids, cfg)
+        ld = build_stack(store=store, uuids=uuids, config=cfg).loader
         res = tight_loop(ld, n_batches=200)
         bt = res["batch_times"][20:] * 1e3
         extra = ""

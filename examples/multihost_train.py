@@ -20,7 +20,7 @@ suffers a region outage and reads degrade to the surviving cluster.
 Run: PYTHONPATH=src python examples/multihost_train.py
 """
 
-from repro.core import ClusterSpec, KVStore, MultiHostConfig, MultiHostRun
+from repro.core import ClusterSpec, KVStore, MultiHostConfig, build_stack
 from repro.data.datasets import SyntheticImageDataset, ingest
 
 N_HOSTS = 4
@@ -41,7 +41,8 @@ def _cfg(n_hosts: int) -> MultiHostConfig:
 def main() -> None:
     store = KVStore()
     uuids = ingest(store, SyntheticImageDataset(n_samples=60_000, seed=0))
-    run = MultiHostRun(store, uuids, _cfg(N_HOSTS)).start()
+    run = build_stack(store=store, uuids=uuids, config=_cfg(N_HOSTS),
+                      start=True).run
     print(f"{run.describe()}; shard sizes {run.shard_sizes()}\n")
 
     rep = run.run(STEPS_PER_PHASE, step_time=STEP_TIME)
@@ -57,7 +58,9 @@ def main() -> None:
 
     # the cluster shrinks: restore the 4-host checkpoint onto 2 hosts
     # (elastic reshard) and lose a storage node mid-phase on top
-    run2 = MultiHostRun(store, uuids, _cfg(RESIZED_HOSTS)).start(ckpt)
+    # restore from a checkpoint: build unstarted, then start(ckpt)
+    run2 = build_stack(store=store, uuids=uuids,
+                       config=_cfg(RESIZED_HOSTS)).run.start(ckpt)
     print(f"\nelastic restore {N_HOSTS} -> {RESIZED_HOSTS} hosts; "
           f"shard sizes now {run2.shard_sizes()} "
           "(interrupted epoch reflowed, exactly-once preserved)")
@@ -93,7 +96,8 @@ def main() -> None:
                               prefetch_buffers=24, io_threads=8,
                               ramp_every=1, hedge_after=1.0, seed=4,
                               placement="cluster_aware", clusters=specs)
-    fed = MultiHostRun(store, uuids, fed_cfg).start()
+    fed = build_stack(store=store, uuids=uuids, config=fed_cfg,
+                      start=True).run
     print(f"\nphase 3 (federated): {fed.describe()}")
     own = fed.federation.ownership_counts(uuids)
     print(f"  ownership: " + ", ".join(f"{c}={n}" for c, n in own.items()))

@@ -13,11 +13,10 @@ Run: PYTHONPATH=src python examples/quickstart.py
 import jax
 
 from repro.configs.base import ArchConfig
-from repro.core import (KVStore, LoaderConfig, SplitSpec, create_splits)
+from repro.core import (KVStore, LoaderConfig, SplitSpec, build_stack,
+                        create_splits)
 from repro.data.datasets import SyntheticTokenDataset, ingest
 from repro.models import build_model
-from repro.core.loader import CassandraLoader
-from repro.data.pipeline import DeviceFeed
 from repro.train.optimizer import OptimizerConfig
 from repro.train.step import init_state, make_train_step
 
@@ -35,10 +34,16 @@ def main() -> None:
                            SplitSpec(fractions=(0.9, 0.1), seed=0))
     print({k: len(v) for k, v in splits.items()}, "(entity-independent)")
 
-    # 3. network loader: 150 ms RTT, out-of-order + incremental prefetch ----
-    loader = CassandraLoader(store, splits["train"], LoaderConfig(
-        batch_size=32, prefetch_buffers=8, io_threads=4, route="high",
-        out_of_order=True, incremental_ramp=True, materialize=True, seed=0))
+    # 3+4a. one call builds the whole data stack: cluster -> pool -> loader
+    #       -> DeviceFeed, over a simulated 150 ms RTT route with
+    #       out-of-order + incremental prefetch
+    stack = build_stack(store=store, uuids=splits["train"],
+                        config=LoaderConfig(
+                            batch_size=32, prefetch_buffers=8, io_threads=4,
+                            route="high", out_of_order=True,
+                            incremental_ramp=True, materialize=True, seed=0),
+                        feed="device", seq_len=64)
+    loader = stack.loader
 
     # 4. train a tiny LM from the stream ------------------------------------
     cfg = ArchConfig(name="quickstart-lm", family="dense", n_layers=2,
@@ -49,7 +54,7 @@ def main() -> None:
     state = init_state(model, opt, jax.random.PRNGKey(0))
     step = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
 
-    feed = DeviceFeed(loader, seq_len=64)
+    feed = stack.feed
     for i in range(40):
         batch, _ = next(feed)
         state, metrics = step(state, {"tokens": batch["tokens"],
@@ -61,7 +66,7 @@ def main() -> None:
     print(f"loader throughput {st.throughput(skip=2)/1e6:.1f} MB/s over a "
           f"simulated 150 ms-RTT link; batch-gap p99 "
           f"{1e3 * float(__import__('numpy').percentile(st.batch_times(1), 99)):.0f} ms")
-    loader.close()
+    stack.close()
 
 
 if __name__ == "__main__":

@@ -11,7 +11,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import CassandraLoader, KVStore, LoaderConfig
+from repro.core import KVStore, LoaderConfig, build_stack
 from repro.data.datasets import SyntheticTokenDataset, decode_token_record, ingest
 from repro.models import build_model
 from repro.serve import ServeConfig, ServingEngine
@@ -28,9 +28,9 @@ def main() -> None:
     store = KVStore()
     uuids = ingest(store, SyntheticTokenDataset(n_samples=256, seq_len=12,
                                                 vocab=cfg.vocab, seed=1))
-    loader = CassandraLoader(store, uuids, LoaderConfig(
+    loader = build_stack(store=store, uuids=uuids, config=LoaderConfig(
         batch_size=16, prefetch_buffers=2, io_threads=2, route="med",
-        materialize=True, seed=1)).start()
+        materialize=True, seed=1), start=True).loader
     batch = loader.next_batch()
     prompts = [decode_token_record(s.payload)[0] for s in batch.samples]
 

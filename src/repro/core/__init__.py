@@ -14,8 +14,8 @@ from .flowctl import (FlowControlConfig, FlowController,
 from .kvstore import DataRow, KVStore, MetaRow, make_uuid, token_of
 from .loader import CassandraLoader, LoaderConfig, consume_with_step_time, tight_loop
 from .multihost import MultiHostConfig, MultiHostRun
-from .netsim import (BACKENDS, CASSANDRA, SCYLLA, TIERS, Clock, RealClock,
-                     RouteProfile, RouteSchedule, VirtualClock,
+from .netsim import (BACKENDS, CASSANDRA, SCYLLA, TIERS, Clock, EventHandle,
+                     RealClock, RouteProfile, RouteSchedule, VirtualClock,
                      route_bdp_samples)
 from .placement import (PLACEMENT_POLICIES, global_order,
                         preferred_node_subsets, replica_local_fraction,
@@ -27,6 +27,7 @@ from .replication import (SAMPLING_MODES, HotKeyTracker, ReplicaCache,
 from .scenarios import (MODES, QUICK_MATRIX, SCENARIOS,
                         OracleDepthController, Scenario, matrix, run_cell)
 from .splits import SplitSpec, check_entity_independence, create_splits
+from .stack import FEED_KINDS, Stack, build_stack
 from .tenancy import QOS_CLASSES, TenantScheduler, TenantSpec
 from .wirefmt import (WIRE_CODECS, ByteShuffleCodec, Int8QuantCodec,
                       NoneCodec, WireCodec, get_codec)
@@ -45,7 +46,8 @@ __all__ = [
     "MultiHostConfig", "MultiHostRun",
     "consume_with_step_time", "tight_loop", "BACKENDS", "CASSANDRA", "SCYLLA",
     "TIERS", "Clock", "RealClock", "RouteProfile", "RouteSchedule",
-    "route_bdp_samples", "VirtualClock", "EpochPlan",
+    "route_bdp_samples", "VirtualClock", "EventHandle", "EpochPlan",
+    "FEED_KINDS", "Stack", "build_stack",
     "Scenario", "SCENARIOS", "QUICK_MATRIX", "MODES",
     "OracleDepthController", "matrix", "run_cell",
     "compute_reflow", "PLACEMENT_POLICIES", "global_order",

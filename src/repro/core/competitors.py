@@ -14,10 +14,19 @@ non-uniform shuffle the paper criticizes).
 ``SyncWindowLoader`` — tf.data service model: a synchronous request/response
 stream with a bounded in-flight window; throughput ~ window/(RTT + overhead),
 collapsing with distance as in Table 3.
+
+Both baselines are deliberately **codec-free**: neither system ships a wire
+codec in the configuration the paper measures, so their requests take the
+node ``serve()`` / ``SimConnection.request`` default path (``wire_bytes =
+payload bytes``, ``encode_seconds = 0``).  Our stack is allowed to enable
+codecs in the comparison — that asymmetry is part of the result, not a bug.
+``benchmarks/bench_competitors.py`` runs both against the adaptive stack on
+the same scenario cells.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import uuid as _uuid
 from dataclasses import dataclass
 from typing import Callable, List, Optional
@@ -55,7 +64,15 @@ def build_shards(store: KVStore, uuids: List[_uuid.UUID],
 
 
 class RecordShardLoader:
-    """MosaicML-SD-style shard streaming over the simulated network."""
+    """MosaicML-SD-style shard streaming over the simulated network.
+
+    Codec-free by design: StreamingDataset's shard GETs carry the packed
+    record bytes as-is, so every ``SimConnection.request`` here uses the
+    default ``wire_bytes``/``encode_seconds`` path (wire == payload, no
+    node-side encode CPU).  Time-varying routes are honoured: the capped
+    route is derived with ``dataclasses.replace``, keeping burst/schedule/
+    outage fields, and the AIMD model samples them at event time.
+    """
 
     S3_SETUP_RTTS = 2.0             # TCP+TLS handshake per GET
     S3_STREAM_CAP = 45.0e6          # per-object GET throughput ceiling, B/s
@@ -90,11 +107,14 @@ class RecordShardLoader:
             shard = self._shards[self._next_shard]
             self._next_shard += 1
             self._downloading += 1
-            # fresh connection per GET: setup + AIMD ramp from half rate
-            cap_route = RouteProfile(self.route.name, self.route.rtt,
-                                     min(self.route.conn_capacity, self.S3_STREAM_CAP),
-                                     self.route.loss_per_byte, self.route.loss_spread,
-                                     self.route.jitter)
+            # fresh connection per GET: setup + AIMD ramp from half rate.
+            # replace() keeps every other RouteProfile field (burst model,
+            # schedules, outages) — a positional rebuild here once silently
+            # dropped them, pinning competitor runs to a static network.
+            cap_route = dataclasses.replace(
+                self.route,
+                conn_capacity=min(self.route.conn_capacity,
+                                  self.S3_STREAM_CAP))
             conn = SimConnection(self._conn_seq, self.clock, self._node, cap_route,
                                  np.random.default_rng(1000 + self._conn_seq),
                                  self._ingress)
@@ -155,7 +175,14 @@ class RecordShardLoader:
 
 
 class SyncWindowLoader:
-    """tf.data-service-style synchronous streaming: bounded window per RTT."""
+    """tf.data-service-style synchronous streaming: bounded window per RTT.
+
+    Codec-free by design: the tf.data service protocol streams serialized
+    elements uncompressed, so the modelled round-trip carries raw payload
+    bytes — no wire codec, no node-side encode CPU.  The analytic window
+    model only samples route RTT/capacity, so it is insensitive to the
+    schedule-aware route extensions by construction.
+    """
 
     WINDOW_BYTES = 1.3e6            # in-flight element window
     OVERHEAD = 0.0012               # serialization + dispatcher overhead, s

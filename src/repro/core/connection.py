@@ -18,6 +18,7 @@ Extensions beyond the paper (flagged):
 from __future__ import annotations
 
 import uuid as _uuid
+import warnings
 from dataclasses import dataclass
 from typing import Callable, Dict, Iterable, List, Optional
 
@@ -30,6 +31,18 @@ from .kvstore import DataRow
 from .netsim import (Clock, FifoResource, RateResource, RouteProfile,
                      SimConnection, TIERS, NIC_BANDWIDTH)
 from .wirefmt import HOST_CODEC_CORES, WireCodec, get_codec
+
+_codec_alias_warned = False
+
+
+def _warn_codec_alias() -> None:
+    """DeprecationWarning for ``ConnectionPool(codec=...)``, emitted once."""
+    global _codec_alias_warned
+    if not _codec_alias_warned:
+        _codec_alias_warned = True
+        warnings.warn("ConnectionPool(codec=...) is deprecated; use "
+                      "wire_codec= (the spelling shared by LoaderConfig and "
+                      "MultiHostConfig)", DeprecationWarning, stacklevel=3)
 
 
 @dataclass
@@ -66,8 +79,18 @@ class ConnectionPool:
                  preferred_nodes: Optional[Iterable[str]] = None,
                  ingress: Optional[RateResource] = None,
                  on_exhausted: Optional[Callable] = None,
-                 codec: "str | WireCodec | None" = None,
-                 io_scaling: bool = False) -> None:
+                 wire_codec: "str | WireCodec | None" = None,
+                 io_scaling: bool = False,
+                 codec: "str | WireCodec | None" = None) -> None:
+        # ``wire_codec`` is the one spelling used across LoaderConfig /
+        # MultiHostConfig / FederatedConnectionPool; ``codec=`` is the
+        # pre-normalization name kept as a deprecated alias.
+        if codec is not None:
+            if wire_codec is not None:
+                raise TypeError("pass wire_codec= only (codec= is its "
+                                "deprecated alias)")
+            _warn_codec_alias()
+            wire_codec = codec
         if isinstance(route, str):
             route = TIERS[route]
         if isinstance(hedge_after, str) and hedge_after != "auto":
@@ -109,7 +132,7 @@ class ConnectionPool:
         # the client pays decode CPU (the FIFO below models the io-threads'
         # decode workers: full single-core latency per fetch, 1/cores of
         # serialized time).  ``none`` keeps every code path bit-identical.
-        self.codec = get_codec(codec)
+        self.codec = get_codec(wire_codec)
         self._codec_active = self.codec.name != "none"
         self._decode_cpu = FifoResource("client/decode")
         # Controller-driven io-scaling (carried-over ROADMAP item): when on,

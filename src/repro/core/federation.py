@@ -515,7 +515,8 @@ class FederatedConnectionPool:
                  client_ingress_bandwidth: float = NIC_BANDWIDTH,
                  preferred_nodes: Optional[Sequence[str]] = None,
                  region: Optional[str] = None,
-                 wire_codec: "str | Dict[str, str] | None" = None) -> None:
+                 wire_codec: "str | Dict[str, str] | None" = None,
+                 io_scaling: bool = False) -> None:
         self.clock = clock
         self.federation = federation
         self.cluster = federation          # Cluster-surface alias
@@ -560,7 +561,8 @@ class FederatedConnectionPool:
                 preferred_nodes=local_pref or None,
                 ingress=self.ingress,
                 on_exhausted=self._make_exhausted(spec.name),
-                codec=self._member_codec(wire_codec, spec))
+                wire_codec=self._member_codec(wire_codec, spec),
+                io_scaling=io_scaling)
 
     # WAN routes trade cheap node/host CPU for scarce intercontinental
     # bandwidth; sub-millisecond routes have nothing to buy.  ``"auto"``

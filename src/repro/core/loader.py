@@ -101,7 +101,7 @@ class CassandraLoader:
             materialize=cfg.materialize,
             preferred_nodes=cfg.preferred_nodes,
             ingress=ingress,
-            codec=cfg.wire_codec,
+            wire_codec=cfg.wire_codec,
             io_scaling=cfg.io_scaling)
         # An externally-built plan (placement policies, elastic reflow)
         # overrides the default contiguous-strip sharding.

@@ -219,6 +219,19 @@ class MultiHostConfig:
     # same mixed workload.  Takes precedence over tenant-spec sampling;
     # ``sampling="zipf"`` above still forces every host to zipf.
     host_sampling: Optional[Tuple[str, ...]] = None
+    # Wire codec — LoaderConfig.wire_codec, one level up.  A codec name
+    # applies to every host's pool; under a federation (``clusters``) a
+    # ``{member: codec}`` dict or ``"auto"`` (compress WAN members only,
+    # see FederatedConnectionPool) are also accepted.  "none" stays
+    # bit-identical to the pre-codec path.
+    wire_codec: "str | Dict[str, str]" = "none"
+    # Controller-driven issue-parallelism scaling — LoaderConfig.io_scaling
+    # spelling; needs flow_control="adaptive" to have a budget to follow.
+    io_scaling: bool = False
+    # Pinned-arena batch assembly — LoaderConfig.use_arena spelling; only
+    # effective with materialize=True (same rule as the single-host loader).
+    use_arena: bool = False
+    arena_slot_bytes: Optional[int] = None
 
     def loader_config(self, shard_id: int,
                       preferred_nodes: Optional[tuple] = None) -> LoaderConfig:
@@ -243,7 +256,17 @@ class MultiHostConfig:
             preferred_nodes=preferred_nodes,
             flow_control=self.flow_control,
             flow=self.flow,
-            route_admission=self.route_admission)
+            route_admission=self.route_admission,
+            # dict/"auto" codecs are federation-level: the per-member
+            # resolution happens in FederatedConnectionPool, which replaces
+            # the loader-built pool, so the per-loader config carries the
+            # codec only when it is a plain name
+            wire_codec=(self.wire_codec
+                        if isinstance(self.wire_codec, str)
+                        and self.wire_codec != "auto" else "none"),
+            io_scaling=self.io_scaling,
+            use_arena=self.use_arena,
+            arena_slot_bytes=self.arena_slot_bytes)
 
 
 class MultiHostRun:
@@ -283,6 +306,20 @@ class MultiHostRun:
         if cfg.tenant_of_host is not None and not cfg.tenants:
             raise ValueError("tenant_of_host needs tenants "
                              "(set MultiHostConfig.tenants)")
+        if (cfg.wire_codec == "auto" or isinstance(cfg.wire_codec, dict)) \
+                and not cfg.clusters \
+                and not isinstance(cluster, FederatedCluster):
+            raise ValueError("wire_codec='auto' / per-member codec dicts "
+                             "are federation-level (set "
+                             "MultiHostConfig.clusters); a single shared "
+                             "cluster takes one codec name")
+        if cfg.io_scaling and cfg.flow_control != "adaptive":
+            raise ValueError("io_scaling needs flow_control='adaptive' "
+                             "(the active-connection prefix follows the "
+                             "controller's budget)")
+        if cfg.use_arena and not cfg.materialize:
+            raise ValueError("use_arena needs materialize=True (the arena "
+                             "holds real payload bytes)")
         self.tenant_of_host: Optional[Tuple[str, ...]] = None
         if cfg.tenants:
             if cfg.flow_control != "adaptive":
@@ -431,7 +468,10 @@ class MultiHostRun:
                     seed=cfg.seed + 11 + 104729 * i,
                     hedge_after=cfg.hedge_after,
                     materialize=cfg.materialize,
-                    preferred_nodes=prefs[i])
+                    preferred_nodes=prefs[i],
+                    wire_codec=(None if cfg.wire_codec == "none"
+                                else cfg.wire_codec),
+                    io_scaling=cfg.io_scaling)
             self.loaders.append(
                 CassandraLoader(store, uuids,
                                 cfg.loader_config(i, None if pool

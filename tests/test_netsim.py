@@ -1,7 +1,12 @@
 """Unit tests for the network/storage simulator."""
 
+import heapq
+import math
+import random
+
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core.netsim import (AIMDBandwidth, FifoResource, RateResource,
                                RouteProfile, SCYLLA, CASSANDRA, SimServerNode,
@@ -124,3 +129,136 @@ def test_deterministic_replay():
         return done
 
     assert run() == run()
+
+
+# -- event-core ordering property (calendar queue vs reference heap) --------
+
+class _ReferenceClock:
+    """The pre-calendar event core: one binary heap of (time, seq) records.
+
+    This is the ordering oracle the calendar-queue ``VirtualClock`` must
+    match bit-identically — same ``delay <= 0`` clamp, same tie-break, same
+    cancellation semantics (records are skipped at pop time, not removed).
+    """
+
+    class _Handle:
+        def __init__(self, rec):
+            self._rec = rec
+
+        def cancel(self):
+            if self._rec is None or self._rec[2] is None:
+                return False
+            self._rec[2] = None
+            self._rec = None
+            return True
+
+    def __init__(self):
+        self._t = 0.0
+        self._seq = 0
+        self._heap = []
+
+    def now(self):
+        return self._t
+
+    def schedule_cancellable(self, delay, fn, *args):
+        t = self._t + delay if delay > 0.0 else self._t
+        rec = [t, self._seq, fn, args]
+        self._seq += 1
+        heapq.heappush(self._heap, rec)
+        return self._Handle(rec)
+
+    def drain(self):
+        while self._heap:
+            t, _, fn, args = heapq.heappop(self._heap)
+            if fn is None:
+                continue
+            if t > self._t:
+                self._t = t
+            fn(*args)
+
+
+# Delay menu stresses every placement path: 0.0 (same-time tie-break on
+# seq), sub-slot values, the exact slot width and its boundary, mid-ring,
+# the ring horizon (1.024 s) and beyond it (far-heap spill + jump-to-head).
+_DELAYS = (0.0, 0.0, 3e-4, 1e-3, 0.002, 0.0021, 0.0155, 0.25,
+           1.023, 1.024, 1.5, 4.2)
+
+
+def _event_program(clock, seed, n_initial):
+    """Randomized interleaved schedule/cancel workload; returns fire log.
+
+    The same (seed, n_initial) drives the same rng draw sequence on both
+    clocks *as long as the fire order matches* — any ordering divergence
+    desynchronizes the draws and shows up as a log mismatch."""
+    rng = random.Random(seed)
+    log = []
+    pending = []
+    counter = iter(range(10 ** 9))
+
+    def add(depth):
+        label = next(counter)
+        h = clock.schedule_cancellable(rng.choice(_DELAYS), fire, label, depth)
+        pending.append(h)
+
+    def fire(label, depth):
+        log.append((label, clock.now()))
+        if depth < 3 and rng.random() < 0.6:
+            for _ in range(rng.randint(1, 2)):
+                add(depth + 1)
+        if pending and rng.random() < 0.35:
+            # may already have fired — cancel must be a safe no-op then
+            pending.pop(rng.randrange(len(pending))).cancel()
+
+    for _ in range(n_initial):
+        add(0)
+    clock.drain()
+    return log
+
+
+@given(seed=st.integers(0, 2 ** 31 - 1), n_initial=st.integers(1, 40))
+@settings(max_examples=25, deadline=None)
+def test_calendar_queue_matches_reference_heap(seed, n_initial):
+    """Pop order under arbitrary interleaved schedule/cancel sequences is
+    bit-identical to the reference (time, seq) heap — the invariant every
+    committed determinism baseline rests on."""
+    real = VirtualClock()
+    ref = _ReferenceClock()
+    log_real = _event_program(real, seed, n_initial)
+    log_ref = _event_program(ref, seed, n_initial)
+    assert log_real == log_ref
+    assert real.now() == ref.now()
+    assert real.events_processed == len(log_real)
+
+
+def test_event_handle_cancel_semantics():
+    clk = VirtualClock()
+    fired = []
+    h1 = clk.schedule_cancellable(1.0, fired.append, "a")
+    h2 = clk.schedule_cancellable(2.0, fired.append, "b")
+    assert h1.cancel() is True          # this call killed it
+    assert h1.cancel() is False         # double-cancel is a no-op
+    clk.drain()
+    assert fired == ["b"]
+    assert h2.cancel() is False         # already fired
+    assert h2.cancelled
+
+
+def test_cancelled_inf_timer_never_fires():
+    clk = VirtualClock()
+    fired = []
+    h = clk.schedule_cancellable(math.inf, fired.append, "never")
+    clk.schedule(1.0, fired.append, "a")
+    assert h.cancel()
+    clk.drain()
+    assert fired == ["a"]
+    assert clk.now() == pytest.approx(1.0)
+
+
+def test_events_processed_counts_fired_only():
+    clk = VirtualClock()
+    for i in range(5):
+        clk.schedule(0.001 * i, lambda: None)
+    h = clk.schedule_cancellable(0.5, lambda: None)
+    h.cancel()
+    clk.drain()
+    assert clk.events_processed == 5

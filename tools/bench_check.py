@@ -25,10 +25,12 @@ Usage (CI runs exactly this, see .github/workflows/ci.yml):
 
     PYTHONPATH=src python -m benchmarks.bench_ramp --flowctl --quick
     PYTHONPATH=src python -m benchmarks.bench_multihost --replication --quick
+    PYTHONPATH=src python -m benchmarks.bench_multihost --scale --quick
     PYTHONPATH=src python -m benchmarks.bench_scenarios --quick
     PYTHONPATH=src python -m benchmarks.bench_training --goodput --quick
     PYTHONPATH=src python -m benchmarks.bench_tenancy --quick
     PYTHONPATH=src python -m benchmarks.bench_wirefmt --quick
+    PYTHONPATH=src python -m benchmarks.bench_competitors --quick
     python tools/bench_check.py
 
 Baseline update procedure (after an intentional perf change):
@@ -122,6 +124,42 @@ SPECS = {
             "codec.cells.local.byteshuffle.MBps",
             "codec.gain_high",
             "codec.budget_ratio",
+        ],
+    },
+    "multihost_scale.json": {
+        # wall_s / events_per_sec / setup_s are wall-clock and machine-
+        # dependent — the bench itself asserts the CI budget and the
+        # events/sec floor as boolean `checks`; only the deterministic
+        # virtual-clock metrics are gated here.  events_total pins the
+        # event core: a scheduling rewrite that changes the simulated
+        # event count (or ordering enough to alter the run) trips it.
+        "context": ["quick", "n_hosts", "n_clusters", "rounds",
+                    "batch_size", "n_samples", "seed"],
+        "metrics": [
+            "aggregate_MBps",
+            "fairness",
+            "wan_bytes_share",
+            "replica_local_hit_frac",
+            "events_total",
+        ],
+    },
+    "competitors.json": {
+        # the acceptance claim (ours >= both baselines on the high route)
+        # and the baselines' distance-degradation sanity checks are boolean
+        # `checks` asserted by the bench itself; the baselines here guard
+        # the throughput cells the claims are computed from
+        "context": ["quick", "seed", "batch_size", "n_samples",
+                    "n_batches", "shard_bytes"],
+        "metrics": [
+            "cells.local.ours_MBps",
+            "cells.local.sd_MBps",
+            "cells.local.sync_MBps",
+            "cells.med.ours_MBps",
+            "cells.med.sd_MBps",
+            "cells.med.sync_MBps",
+            "cells.high.ours_MBps",
+            "cells.high.sd_MBps",
+            "cells.high.sync_MBps",
         ],
     },
     "scenarios.json": {
